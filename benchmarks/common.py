@@ -1,0 +1,25 @@
+"""Shared benchmark helpers: timing + CSV emission."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+
+def timeit(fn: Callable, *args, repeats: int = 5, warmup: int = 1) -> float:
+    """Median wall time in microseconds."""
+    for _ in range(warmup):
+        fn(*args)
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn(*args)
+        ts.append((time.perf_counter() - t0) * 1e6)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def emit(name: str, us_per_call: float = 0.0, **derived):
+    parts = [name, f"{us_per_call:.2f}"]
+    parts += [f"{k}={v}" for k, v in derived.items()]
+    print(",".join(parts))

@@ -1,0 +1,62 @@
+"""PPA kernel-layer throughput on this host (CPU): jnp ref path vs Pallas
+interpret path vs numpy golden, plus the model-level activation ops.
+Absolute numbers are CPU-bound; the deliverable is the relative cost and
+the bit-exactness cross-check at size."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import FWLConfig, PPAScheme, eval_table_int, get_table
+from repro.kernels import (pack_table, ppa_apply, ppa_eval_2d, ppa_eval_ref,
+                           ppa_softmax)
+from benchmarks.common import emit, timeit
+
+
+def main() -> None:
+    tab = get_table("sigmoid", FWLConfig(8, 16, (8, 16), (16, 16), 16),
+                    PPAScheme(order=2, quantizer="fqa"))
+    tc = pack_table(tab)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.integers(0, 256, (256, 1024)), jnp.int32)
+    kw = dict(w_in=tc.w_in, w_out=tc.w_out, w_a=tc.w_a, w_o=tc.w_o,
+              w_b=tc.w_b)
+
+    ref = jax.jit(lambda v: ppa_eval_ref(v, tc.starts, tc.coefs, **kw))
+    us = timeit(lambda: ref(x).block_until_ready(), repeats=10)
+    n = x.size
+    emit("kernel/ref_jit", us, melems_per_s=f"{n / us:.1f}")
+
+    pal = jax.jit(lambda v: ppa_eval_2d(v, tc.starts, tc.coefs,
+                                        interpret=True, **kw))
+    us_p = timeit(lambda: pal(x).block_until_ready(), repeats=3)
+    emit("kernel/pallas_interpret", us_p, melems_per_s=f"{n / us_p:.1f}",
+         note="interpret-mode (CPU validation; compiled on real TPU)")
+
+    y_ref = np.asarray(ref(x))
+    y_pal = np.asarray(pal(x))
+    y_gold = eval_table_int(tab, np.asarray(x, np.int64))
+    emit("kernel/bit_exact", 0.0,
+         ref_eq_gold=bool((y_ref == y_gold).all()),
+         pallas_eq_gold=bool((y_pal == y_gold).all()))
+
+    # model-level float act + softmax
+    xf = jnp.asarray(rng.normal(0, 2, (256, 1024)), jnp.float32)
+    act = jax.jit(lambda v: ppa_apply(tc, v))
+    us_a = timeit(lambda: act(xf).block_until_ready(), repeats=10)
+    emit("kernel/ppa_apply_float", us_a, melems_per_s=f"{n / us_a:.1f}")
+
+    e2 = pack_table(get_table("exp2_frac",
+                              FWLConfig(8, 16, (8, 16), (16, 16), 16),
+                              PPAScheme(order=2, quantizer="fqa")))
+    sm = jax.jit(lambda v: ppa_softmax(e2, v))
+    us_s = timeit(lambda: sm(xf).block_until_ready(), repeats=10)
+    sm_exact = jax.jit(lambda v: jax.nn.softmax(v, axis=-1))
+    us_e = timeit(lambda: sm_exact(xf).block_until_ready(), repeats=10)
+    emit("kernel/ppa_softmax", us_s, vs_exact=f"{us_s / us_e:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Aggregate the dry-run artifacts into the §Roofline table (all 40 cells
+x 2 meshes).  Reads artifacts/dryrun/*.json produced by launch/dryrun.py."""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import emit
+
+ART = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+
+def main() -> None:
+    if not ART.exists():
+        emit("roofline/missing", 0.0,
+             note="run python -m repro.launch.dryrun first")
+        return
+    recs = []
+    for f in sorted(ART.glob("*.json")):
+        recs.append(json.loads(f.read_text()))
+    n_ok = sum(1 for r in recs if r.get("status") == "ok")
+    n_skip = sum(1 for r in recs if r.get("status") == "skip")
+    emit("roofline/cells", 0.0, ok=n_ok, skipped=n_skip, total=len(recs))
+    for r in recs:
+        tag = f"{r['arch']}|{r['shape']}|{r['mesh']}"
+        if r.get("status") == "skip":
+            emit(f"roofline/{tag}", 0.0, status="SKIP",
+                 reason=r["reason"][:40])
+            continue
+        rl = r["roofline"]
+        emit(f"roofline/{tag}", 0.0,
+             t_compute=f"{rl['t_compute']:.3f}",
+             t_memory=f"{rl['t_memory']:.3f}",
+             t_collective=f"{rl['t_collective']:.3f}",
+             bottleneck=rl["bottleneck"],
+             frac=f"{rl['roofline_fraction']:.3f}",
+             useful_flops=f"{rl['useful_flops_ratio']:.2f}",
+             mem_gib_dev=f"{r['memory'].get('peak_bytes_per_device', 0) / 2**30:.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Run every benchmark: one module per paper table + framework benches.
+
+  PYTHONPATH=src python -m benchmarks.run [--skip-slow]
+
+Output: ``name,us_per_call,derived...`` CSV lines per bench.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+MODULES = [
+    "benchmarks.table1_fqa_o1_sigmoid",   # paper Table I
+    "benchmarks.table2_pwl_compare",      # paper Table II
+    "benchmarks.table4_multiplierless",   # paper Table IV
+    "benchmarks.table6_asic8",            # paper Table VI (cost model)
+    "benchmarks.table7_asic16",           # paper Table VII (cost model)
+    "benchmarks.tbw_speedup",             # paper Eq. 8-10
+    "benchmarks.search_throughput",
+    "benchmarks.kernel_throughput",
+    "benchmarks.roofline_table",          # §Roofline aggregate
+    "benchmarks.e2e_train_tokens",
+]
+SLOW_MODULES = [
+    "benchmarks.table3_quad_compare",     # paper Table III (order-2 search)
+    "benchmarks.table5_sm_o2",            # paper Table V
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--skip-slow", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    mods = MODULES + ([] if args.skip_slow else SLOW_MODULES)
+    if args.only:
+        mods = [m for m in mods if args.only in m]
+    failures = []
+    for name in mods:
+        print(f"# === {name} ===", flush=True)
+        t0 = time.time()
+        try:
+            mod = __import__(name, fromlist=["main"])
+            mod.main()
+        except Exception:
+            traceback.print_exc()
+            failures.append(name)
+        print(f"# ({time.time() - t0:.1f}s)", flush=True)
+    if failures:
+        print(f"# FAILED: {failures}", flush=True)
+        sys.exit(1)
+    print("# all benchmarks complete", flush=True)
+
+
+if __name__ == "__main__":
+    main()

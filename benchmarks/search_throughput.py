@@ -1,0 +1,34 @@
+"""Software-side search throughput: candidate evaluations per second for
+each quantizer (the cost TBW amortizes), and the full-space size the FQA
+search covers per segment."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (FWLConfig, PPAScheme, SegmentEvaluator,
+                        grid_for_interval, make_quantizer)
+from repro.core.functions import get_naf
+from benchmarks.common import emit, timeit
+
+
+def main() -> None:
+    cfg = FWLConfig(8, 8, (8,), (8,), 8)
+    spec = get_naf("sigmoid")
+    x_int = grid_for_interval(0, 1, 8)
+    f = spec(x_int / 256.0)
+    for qname in ("fqa", "fqa_fast", "qpa", "plac"):
+        q = make_quantizer(qname)
+        ev = SegmentEvaluator(x_int, f, cfg, q, mae_t=1.953e-3)
+        us = timeit(lambda: ev.evaluate(0, 24), repeats=5)
+        fit = ev.evaluate(0, 24)
+        emit(f"search/{qname}", us, evals_per_fit=fit.evals,
+             evals_per_s=f"{max(1, fit.evals) / (us * 1e-6):.2e}",
+             ok=fit.ok)
+    emit("search/fqa_space_per_stage", 0.0,
+         d_range=f"[-2^k, 2^(k+1)] with k=w_a+w_in-w_o",
+         k_at_8bit=cfg.d_bits(0))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Paper Table I: FQA-O1 sigmoid on [0,1), Wi=8 Wa=8 Wb=8 Wo=8.
+
+Reproduces the 18-segment table and the deviation of the optimal quantized
+slope from the pre-quantization (Remez) optimum — the paper's headline
+evidence that +-1 fine-tuning (QPA) cannot reach the optimum (deviations
+up to +131 ULP at segment 9)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (FWLConfig, PPAScheme, compile_ppa_table,
+                        fit_minimax, grid_for_interval, round_half_away)
+from benchmarks.common import emit, timeit
+
+
+def main() -> None:
+    cfg = FWLConfig(w_in=8, w_out=8, w_a=(8,), w_o=(8,), w_b=8)
+    us = timeit(lambda: compile_ppa_table(
+        "sigmoid", cfg, PPAScheme(order=1, quantizer="fqa"),
+        # paper Table I uses W_a=8 for the deviation study
+    ), repeats=1, warmup=0)
+    tab = compile_ppa_table("sigmoid", cfg, PPAScheme(order=1,
+                                                      quantizer="fqa"))
+    emit("table1/compile", us, segments=tab.num_segments,
+         mae=f"{tab.mae_hard:.3e}")
+
+    # deviation of quantized slope vs the pre-quant minimax optimum
+    from repro.core.functions import get_naf
+    spec = get_naf("sigmoid")
+    devs = []
+    starts = tab.starts_int.tolist() + [256]
+    for i in range(tab.num_segments):
+        x = np.arange(starts[i], starts[i + 1]) / 256.0
+        a_real, _b = fit_minimax(x, spec(x), 1)
+        a_opt_q = round_half_away(a_real[0] * (1 << cfg.w_a[0]))
+        devs.append(int(tab.a_int[i, 0] - a_opt_q))
+    emit("table1/slope_deviation", 0.0,
+         min=min(devs), max=max(devs),
+         n_beyond_pm1=sum(1 for d in devs if abs(d) > 1),
+         paper_seg9_range="69..131")
+    for i in range(tab.num_segments):
+        emit(f"table1/seg{i + 1:02d}", 0.0,
+             a=int(tab.a_int[i, 0]), b=int(tab.b_int[i]),
+             xs=int(tab.starts_int[i]), dev=devs[i])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Paper Table II: piecewise-linear segment counts — FQA-O1 vs QPA-G1 vs
+PLAC, sigmoid/tanh at 8- and 16-bit output precision."""
+
+from __future__ import annotations
+
+from repro.core import FWLConfig, PPAScheme, compile_ppa_table
+from benchmarks.common import emit, timeit
+
+F, S = FWLConfig, PPAScheme
+
+ROWS = [
+    ("sigmoid", F(8, 8, (7,), (8,), 8), S(1, None, "fqa"), 18),
+    ("sigmoid", F(8, 8, (8,), (8,), 8), S(1, None, "qpa"), 60),
+    ("sigmoid", F(8, 8, (8,), (8,), 8),
+     S(1, None, "plac", segmenter="bisection"), 144),
+    ("sigmoid", F(8, 16, (16,), (16,), 14), S(1, None, "fqa"), 33),
+    ("sigmoid", F(8, 16, (16,), (16,), 16), S(1, None, "qpa"), 45),
+    ("tanh", F(8, 8, (8,), (8,), 8), S(1, None, "fqa"), 15),
+    ("tanh", F(8, 8, (8,), (8,), 8), S(1, None, "qpa"), 34),
+    ("tanh", F(8, 8, (8,), (8,), 8),
+     S(1, None, "plac", segmenter="bisection"), 98),
+    ("tanh", F(8, 16, (14,), (16,), 16), S(1, None, "fqa"), 79),
+    ("tanh", F(8, 16, (16,), (16,), 16), S(1, None, "qpa"), 86),
+]
+
+
+def main() -> None:
+    for naf, cfg, scheme, paper in ROWS:
+        us = timeit(lambda: compile_ppa_table(naf, cfg, scheme),
+                    repeats=1, warmup=0)
+        tab = compile_ppa_table(naf, cfg, scheme)
+        emit(f"table2/{naf}-{scheme.tag}-w{cfg.w_out}", us,
+             segs=tab.num_segments, paper_segs=paper,
+             mae=f"{tab.mae_hard:.3e}",
+             match=("exact" if tab.num_segments == paper else
+                    f"{(tab.num_segments - paper) / paper:+.1%}"))
+
+
+if __name__ == "__main__":
+    main()

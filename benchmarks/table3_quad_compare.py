@@ -1,0 +1,35 @@
+"""Paper Table III: piecewise-quadratic — FQA-O2 vs QPA-G2."""
+
+from __future__ import annotations
+
+from repro.core import FWLConfig, PPAScheme, compile_ppa_table
+from benchmarks.common import emit, timeit
+
+F, S = FWLConfig, PPAScheme
+
+ROWS = [
+    ("sigmoid", F(8, 8, (6, 8), (8, 8), 8), S(2, None, "fqa"), 10),
+    ("sigmoid", F(8, 8, (8, 8), (8, 8), 8), S(2, None, "qpa"), 60),
+    ("sigmoid", F(8, 16, (8, 16), (16, 16), 16), S(2, None, "fqa"), 12),
+    ("sigmoid", F(8, 16, (8, 16), (16, 16), 16), S(2, None, "qpa"), 23),
+    ("tanh", F(8, 8, (8, 6), (8, 8), 8), S(2, None, "fqa"), 8),
+    ("tanh", F(8, 8, (8, 8), (8, 8), 8), S(2, None, "qpa"), 10),
+    ("tanh", F(8, 16, (8, 16), (16, 16), 16), S(2, None, "fqa"), 16),
+    ("tanh", F(8, 16, (8, 16), (16, 16), 16), S(2, None, "qpa"), 30),
+]
+
+
+def main() -> None:
+    for naf, cfg, scheme, paper in ROWS:
+        us = timeit(lambda: compile_ppa_table(naf, cfg, scheme),
+                    repeats=1, warmup=0)
+        tab = compile_ppa_table(naf, cfg, scheme)
+        emit(f"table3/{naf}-{scheme.tag}-w{cfg.w_out}", us,
+             segs=tab.num_segments, paper_segs=paper,
+             mae=f"{tab.mae_hard:.3e}",
+             match=("exact" if tab.num_segments == paper else
+                    f"{(tab.num_segments - paper) / paper:+.1%}"))
+
+
+if __name__ == "__main__":
+    main()

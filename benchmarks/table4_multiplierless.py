@@ -1,0 +1,33 @@
+"""Paper Table IV: multiplierless PWL — FQA-Sm-O1 vs QPA-M1 / ML-PLAC."""
+
+from __future__ import annotations
+
+from repro.core import FWLConfig, PPAScheme, compile_ppa_table
+from benchmarks.common import emit, timeit
+
+F, S = FWLConfig, PPAScheme
+
+ROWS = [
+    ("sigmoid", F(8, 8, (8,), (8,), 8), S(1, 2, "fqa"), 24),
+    ("sigmoid", F(8, 8, (8,), (8,), 8), S(1, 4, "fqa"), 18),
+    ("sigmoid", F(8, 8, (1,), (8,), 8), S(1, 1, "mlplac"), 60),
+    ("tanh", F(8, 8, (7,), (8,), 8), S(1, 2, "fqa"), 28),
+    ("tanh", F(8, 8, (8,), (8,), 8), S(1, 4, "fqa"), 17),
+    ("tanh", F(8, 8, (1,), (8,), 8), S(1, 1, "mlplac"), 54),
+]
+
+
+def main() -> None:
+    for naf, cfg, scheme, paper in ROWS:
+        us = timeit(lambda: compile_ppa_table(naf, cfg, scheme),
+                    repeats=1, warmup=0)
+        tab = compile_ppa_table(naf, cfg, scheme)
+        emit(f"table4/{naf}-{scheme.tag}", us,
+             segs=tab.num_segments, paper_segs=paper,
+             mae=f"{tab.mae_hard:.3e}",
+             match=("exact" if tab.num_segments == paper else
+                    f"{(tab.num_segments - paper) / paper:+.1%}"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Paper Table VI (8-bit ASIC results) via the calibrated unit-gate cost
+model.  No Synopsys DC in this environment: constants are least-squares
+calibrated on the paper's own 18 rows; we report per-row model error and
+the headline ratios (FQA vs QPA/PLAC area & power)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.hwcost import (PAPER_TABLE6, _features_from_row, calibrate)
+from benchmarks.common import emit
+
+
+def main() -> None:
+    cal = calibrate()
+    rows = PAPER_TABLE6
+    X = np.stack([_features_from_row(r) for r in rows])
+    area = X @ cal["area"]
+    power = X @ cal["power"]
+    for r, a, p in zip(rows, area, power):
+        emit(f"table6/{r['tag']}", 0.0,
+             model_area=f"{a:.0f}", paper_area=r["area"],
+             area_err=f"{(a - r['area']) / r['area']:+.1%}",
+             model_power=f"{p:.3f}", paper_power=r["power"],
+             power_err=f"{(p - r['power']) / r['power']:+.1%}")
+    # headline: FQA-O1 vs QPA-G1 (paper: >50% area & power reduction)
+    fqa = next(r for r in rows if r["tag"] == "FQA-O1")
+    qpa = next(r for r in rows if r["tag"] == "QPA-G1")
+    emit("table6/headline_area_reduction", 0.0,
+         paper=f"{1 - fqa['area'] / qpa['area']:.1%}",
+         model=f"{1 - float(area[0]) / float(area[1]):.1%}")
+    emit("table6/headline_power_reduction", 0.0,
+         paper=f"{1 - fqa['power'] / qpa['power']:.1%}",
+         model=f"{1 - float(power[0]) / float(power[1]):.1%}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Paper Table VII (16-bit ASIC results) via the calibrated cost model."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.hwcost import (PAPER_TABLE7, _features_from_row, calibrate)
+from benchmarks.common import emit
+
+
+def main() -> None:
+    cal = calibrate()
+    rows = PAPER_TABLE7
+    X = np.stack([_features_from_row(r) for r in rows])
+    area = X @ cal["area"]
+    power = X @ cal["power"]
+    errs = []
+    for r, a, p in zip(rows, area, power):
+        errs.append(abs(a - r["area"]) / r["area"])
+        emit(f"table7/{r['tag']}", 0.0,
+             model_area=f"{a:.0f}", paper_area=r["area"],
+             area_err=f"{(a - r['area']) / r['area']:+.1%}",
+             model_power=f"{p:.3f}", paper_power=r["power"],
+             power_err=f"{(p - r['power']) / r['power']:+.1%}")
+    emit("table7/mean_area_err", 0.0, value=f"{np.mean(errs):.1%}")
+    # the paper's 16-bit conclusion: FQA-S3-O2 is the best design point
+    best = min(rows, key=lambda r: r["area"])
+    emit("table7/best_paper_design", 0.0, tag=best["tag"])
+
+
+if __name__ == "__main__":
+    main()

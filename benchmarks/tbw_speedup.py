@@ -1,0 +1,38 @@
+"""TBW acceleration (paper Sec. III-B, Eq. 8-10): candidate-evaluation and
+grid-point counts for TBW vs PLAC-bisection vs Sun-sequential, plus the
+paper's analytic first-segment speedup ratios."""
+
+from __future__ import annotations
+
+from repro.core import FWLConfig, PPAScheme, compile_ppa_table
+from benchmarks.common import emit, timeit
+
+F, S = FWLConfig, PPAScheme
+
+
+def main() -> None:
+    cfg = F(8, 8, (8,), (8,), 8)
+    for segmenter in ("tbw", "bisection", "sequential"):
+        sch = S(1, None, "fqa", segmenter=segmenter)
+        us = timeit(lambda: compile_ppa_table("sigmoid", cfg, sch),
+                    repeats=3, warmup=1)
+        tab = compile_ppa_table("sigmoid", cfg, sch)
+        emit(f"tbw/{segmenter}", us,
+             segs=tab.num_segments,
+             segment_evals=int(tab.stats["segment_evals"]),
+             candidate_evals=int(tab.stats["candidate_evals"]),
+             points=int(tab.stats["points_touched"]))
+
+    # paper Eq. (8)-(10) analytic ratios at Wi=8, N=4
+    wi, n = 8, 4
+    eq8 = 2 ** (n + 1) - 1
+    eq9 = 1 + (2 ** (n + 1) - 2) / (wi - n + 2 ** (n - wi))
+    eq10 = 1 + (2 ** (n + 1) - 4) / (wi - n + 2 + 2 ** (n - wi))
+    emit("tbw/eq8_first_boundary_ratio", 0.0, value=f"{eq8}",
+         paper="31")
+    emit("tbw/eq9_left_case_speedup", 0.0, value=f"{eq9:.1f}", paper="5.6-8.4 range")
+    emit("tbw/eq10_right_case_speedup", 0.0, value=f"{eq10:.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Quickstart: compile an FQA table, run it through the hardware datapath,
+price it with the calibrated cost model, and drop it into a model.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (FWLConfig, PPAScheme, compile_ppa_table,
+                        estimate_cost, table_mae_report)
+from repro.kernels import make_ppa_fn, pack_table, ppa_apply
+
+# 1. Compile the paper's 8-bit sigmoid design point: FQA-O1, 18 segments
+cfg = FWLConfig(w_in=8, w_out=8, w_a=(7,), w_o=(8,), w_b=8)
+table = compile_ppa_table("sigmoid", cfg, PPAScheme(order=1,
+                                                    quantizer="fqa"))
+print(f"sigmoid FQA-O1: {table.num_segments} segments "
+      f"(paper: 18), MAE_hard={table.mae_hard:.3e} "
+      f"(paper: 1.953e-3), MAE_0={table.stats['mae0']}")
+
+# 2. Verify against the exact function through the jitted float path
+tc = pack_table(table)
+x = jnp.linspace(-0.99, 0.99, 512)
+y = ppa_apply(tc, x)                       # fixed-point datapath inside
+err = jnp.abs(jax.nn.sigmoid(x) - y).max()
+print(f"float-path max error vs exact sigmoid: {float(err):.3e}")
+
+# 3. Price it (unit-gate model calibrated on the paper's DC tables)
+cost = estimate_cost(table)
+print(f"estimated area {cost.area_um2:.0f} um^2 "
+      f"(paper: 1581.2), power {cost.power_mw:.3f} mW, "
+      f"delay {cost.delay_ns:.2f} ns, LUT {cost.lut_bits} bits")
+
+# 4. Use it as a model activation (all ten assigned archs accept
+#    act_impl="ppa"/"ppa8" — see examples/serve_lm.py)
+act = make_ppa_fn(table)
+h = act(jnp.asarray(np.random.default_rng(0).normal(0, 1, (4, 8)),
+                    jnp.float32))
+print(f"activation output shape {h.shape}, finite: "
+      f"{bool(jnp.isfinite(h).all())}")
+print("report:", table_mae_report(table))

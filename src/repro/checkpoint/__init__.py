@@ -1,0 +1,5 @@
+"""repro.checkpoint — atomic, resumable, mesh-reshardable checkpoints."""
+
+from .checkpoint import gc_old, latest_step, restore, save
+
+__all__ = ["gc_old", "latest_step", "restore", "save"]

@@ -1,0 +1,148 @@
+"""Atomic, resumable, mesh-reshardable checkpoints.
+
+Layout::
+
+    <dir>/step_00001234.tmp/      (written first)
+        arrays.npz                flattened pytree leaves by path-key
+        manifest.json             {step, keys, shapes, dtypes, extra}
+    <dir>/step_00001234/          (atomic rename after manifest fsync)
+
+Fault-tolerance contract:
+  * a crash mid-save leaves only a ``.tmp`` dir — ``latest_step`` ignores
+    it, so restart resumes from the previous complete checkpoint;
+  * ``restore`` re-materializes every leaf with the *target* sharding
+    (``device_put`` against whatever mesh the restart built) — elastic
+    rescale = same checkpoint, different mesh;
+  * the data-iterator cursor and PRNG key ride in ``extra``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from pathlib import Path
+from typing import Any, Dict, Optional
+
+import jax
+import ml_dtypes
+import numpy as np
+
+__all__ = ["save", "restore", "latest_step", "gc_old"]
+
+_SEP = "/"
+
+# npz cannot round-trip ml_dtypes (bfloat16, fp8); store a raw view and
+# record the logical dtype in the manifest
+_VIEW_AS = {
+    "bfloat16": np.uint16, "float8_e4m3fn": np.uint8,
+    "float8_e5m2": np.uint8,
+}
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(
+            str(p.key) if hasattr(p, "key") else str(p.idx) for p in path)
+        arr = np.asarray(leaf)
+        if str(arr.dtype) in _VIEW_AS:
+            arr = arr.view(_VIEW_AS[str(arr.dtype)])
+        flat[key] = arr
+    return flat
+
+
+def save(ckpt_dir, step: int, tree, extra: Optional[dict] = None,
+         keep: int = 3) -> Path:
+    ckpt_dir = Path(ckpt_dir)
+    ckpt_dir.mkdir(parents=True, exist_ok=True)
+    final = ckpt_dir / f"step_{step:08d}"
+    tmp = ckpt_dir / f"step_{step:08d}.tmp"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+
+    logical_dtypes = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(
+            str(p.key) if hasattr(p, "key") else str(p.idx) for p in path)
+        logical_dtypes[key] = str(np.asarray(leaf).dtype)
+    flat = _flatten(tree)
+    np.savez(tmp / "arrays.npz", **flat)
+    manifest = {
+        "step": step,
+        "keys": sorted(flat),
+        "shapes": {k: list(v.shape) for k, v in flat.items()},
+        "dtypes": logical_dtypes,
+        "extra": extra or {},
+    }
+    mpath = tmp / "manifest.json"
+    mpath.write_text(json.dumps(manifest))
+    with open(mpath) as f:          # ensure manifest durably on disk
+        os.fsync(f.fileno())
+    if final.exists():
+        shutil.rmtree(final)
+    os.replace(tmp, final)          # atomic publish
+    gc_old(ckpt_dir, keep)
+    return final
+
+
+def latest_step(ckpt_dir) -> Optional[int]:
+    ckpt_dir = Path(ckpt_dir)
+    if not ckpt_dir.exists():
+        return None
+    steps = []
+    for p in ckpt_dir.iterdir():
+        if p.is_dir() and p.name.startswith("step_") \
+                and not p.name.endswith(".tmp") \
+                and (p / "manifest.json").exists():
+            try:
+                steps.append(int(p.name[5:]))
+            except ValueError:
+                continue
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir, step: int, tree_like, shardings=None
+            ) -> tuple[Any, dict]:
+    """Load a checkpoint into the structure of ``tree_like``.
+
+    ``shardings``: optional matching pytree of NamedSharding — leaves are
+    device_put against it (the resharding path for elastic restarts);
+    otherwise plain host arrays are returned.
+    """
+    d = Path(ckpt_dir) / f"step_{step:08d}"
+    manifest = json.loads((d / "manifest.json").read_text())
+    data = np.load(d / "arrays.npz")
+
+    paths, treedef = jax.tree_util.tree_flatten_with_path(tree_like)
+    shard_leaves = (jax.tree_util.tree_leaves(shardings)
+                    if shardings is not None else [None] * len(paths))
+    leaves = []
+    for (path, like), shard in zip(paths, shard_leaves):
+        key = _SEP.join(
+            str(p.key) if hasattr(p, "key") else str(p.idx) for p in path)
+        if key not in data:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = data[key]
+        ldt = manifest["dtypes"].get(key, str(arr.dtype))
+        if ldt in _VIEW_AS and arr.dtype == _VIEW_AS[ldt]:
+            arr = arr.view(np.dtype(getattr(ml_dtypes, ldt)))
+        if tuple(arr.shape) != tuple(like.shape):
+            raise ValueError(
+                f"shape mismatch for {key}: ckpt {arr.shape} vs "
+                f"expected {like.shape}")
+        arr = arr.astype(like.dtype)
+        leaves.append(jax.device_put(arr, shard) if shard is not None
+                      else arr)
+    return treedef.unflatten(leaves), manifest["extra"]
+
+
+def gc_old(ckpt_dir, keep: int) -> None:
+    ckpt_dir = Path(ckpt_dir)
+    steps = sorted(
+        int(p.name[5:]) for p in ckpt_dir.iterdir()
+        if p.is_dir() and p.name.startswith("step_")
+        and not p.name.endswith(".tmp"))
+    for s in steps[:-keep] if keep else []:
+        shutil.rmtree(ckpt_dir / f"step_{s:08d}", ignore_errors=True)

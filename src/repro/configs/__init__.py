@@ -1,0 +1,8 @@
+"""repro.configs — the ten assigned architectures + shape profiles."""
+
+from .base import (ARCH_IDS, SHAPES, ShapeProfile, apply_shape, get_config,
+                   get_smoke_config, resolve_for_mesh, shape_skip_reason)
+
+__all__ = ["ARCH_IDS", "SHAPES", "ShapeProfile", "apply_shape",
+           "get_config", "get_smoke_config", "resolve_for_mesh",
+           "shape_skip_reason"]

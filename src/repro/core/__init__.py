@@ -1,0 +1,39 @@
+"""repro.core — the paper's contribution: FQA full-space quantization-driven
+PPA compilation (fit -> quantize -> segment -> pack), TBW segmentation, the
+FQA-On / FQA-Sm-On schemes, the FWL design flow, the hardware-constrained
+workflow and the calibrated hardware cost model."""
+
+from .datapath import FWLConfig, concat_add, horner_fixed
+from .fixed_point import (from_fixed, grid_for_interval, hamming_weight,
+                          min_signed_digits, round_half_away, to_fixed,
+                          trunc_shift)
+from .functions import NAF_REGISTRY, NAFSpec, get_naf
+from .fwl_search import FWLSearchResult, optimize_fwls
+from .hwcost import HWCost, calibrate, estimate_cost
+from .quantize import (FQAQuantizer, MLPLACQuantizer, PLACQuantizer,
+                       QPAQuantizer, Quantizer, SegmentFit, make_quantizer)
+from .registry import DEFAULT_SCHEMES, get_table
+from .remez import fit_minimax, horner
+from .schemes import (PPAScheme, PPATable, compile_ppa_table, eval_table_int,
+                      table_mae_report)
+from .segmentation import (Segment, SegmentEvaluator, bisection_segment,
+                           sequential_segment, tbw_segment)
+from .workflow import WorkflowResult, hardware_constrained_ppa
+
+__all__ = [
+    "FWLConfig", "concat_add", "horner_fixed",
+    "from_fixed", "grid_for_interval", "hamming_weight", "min_signed_digits",
+    "round_half_away", "to_fixed", "trunc_shift",
+    "NAF_REGISTRY", "NAFSpec", "get_naf",
+    "FWLSearchResult", "optimize_fwls",
+    "HWCost", "calibrate", "estimate_cost",
+    "FQAQuantizer", "MLPLACQuantizer", "PLACQuantizer", "QPAQuantizer",
+    "Quantizer", "SegmentFit", "make_quantizer",
+    "DEFAULT_SCHEMES", "get_table",
+    "fit_minimax", "horner",
+    "PPAScheme", "PPATable", "compile_ppa_table", "eval_table_int",
+    "table_mae_report",
+    "Segment", "SegmentEvaluator", "bisection_segment", "sequential_segment",
+    "tbw_segment",
+    "WorkflowResult", "hardware_constrained_ppa",
+]

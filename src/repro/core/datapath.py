@@ -1,0 +1,143 @@
+"""The FQA-On fixed-point Horner datapath (paper Fig. 2 / Fig. 3).
+
+Bit-exact integer model of the hardware computation unit with *fully
+decoupled* fractional word lengths:
+
+    h1 = trunc(a1 * x)                      -> FWL w_o[0]
+    g1 = h1 (+) a2        concat adder      -> FWL max(w_o[0], w_a[1])
+    h2 = trunc(g1 * x)                      -> FWL w_o[1]
+    ...
+    out = hn (+) b                          -> FWL max(w_o[n-1], w_b) -> w_out
+
+The paper's concatenation adder (Fig. 3) excludes the superfluous low
+fractional bits of the wider operand from the physical adder and stitches
+them back after the add.  Because those low bits of the *other* operand are
+zero, this is numerically an exact addition at the finer FWL — the trick
+saves adder width in silicon, not precision.  We therefore model it as an
+exact aligned add (and prove the equivalence in tests/test_core_datapath.py).
+
+Everything is vectorised so coefficient arrays may carry leading candidate
+dimensions (the FQA search batches thousands of candidate coefficient sets
+against the whole segment grid at once).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence, Tuple
+
+import numpy as np
+
+from .fixed_point import trunc_shift
+
+__all__ = ["FWLConfig", "horner_fixed", "concat_add"]
+
+
+@dataclasses.dataclass(frozen=True)
+class FWLConfig:
+    """Fractional word lengths for an order-n datapath.
+
+    w_in:  FWL of the (integer) input x_q.
+    w_out: FWL of the final output (W_o,final).
+    w_a:   FWLs of the Horner coefficients a_1..a_n (paper W_a,i).
+    w_o:   FWLs of multiplier outputs 1..n (paper W_o,i).
+    w_b:   FWL of the intercept b.
+    """
+
+    w_in: int
+    w_out: int
+    w_a: Tuple[int, ...]
+    w_o: Tuple[int, ...]
+    w_b: int
+    #: beyond-paper variant: round (add half-ULP) instead of floor at each
+    #: multiplier-output truncation.  Hardware cost: one carry-in per
+    #: truncation. Widens feasible segments ~15-20% at 16-bit output (see
+    #: EXPERIMENTS.md §Paper-validation); the paper's strict truncation is
+    #: the default and is what all paper-table reproductions use.
+    round_mults: bool = False
+
+    def __post_init__(self):
+        if len(self.w_a) != len(self.w_o):
+            raise ValueError("w_a and w_o must have the same length (order n)")
+        if not self.w_a:
+            raise ValueError("order-0 datapath is just the intercept; n >= 1")
+
+    @property
+    def order(self) -> int:
+        return len(self.w_a)
+
+    def d_bits(self, i: int) -> int:
+        """FQA offset-space width k_i for stage i (0-based).
+
+        The low k_i fractional bits of a_i act on the output only through
+        the truncation at multiplier i (paper Eq. 4/5; see DESIGN.md §4 for
+        the W_a,i-1 typo discussion).
+        """
+        return max(0, self.w_a[i] + self.w_in - self.w_o[i])
+
+    def replace(self, **kw) -> "FWLConfig":
+        return dataclasses.replace(self, **kw)
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def concat_add(u, w_u: int, v, w_v: int):
+    """Concatenation adder: exact add of fixed(u, w_u) + fixed(v, w_v).
+
+    Returns (sum_int, w_sum) with w_sum = max(w_u, w_v).  The physical
+    narrow-adder + bit-stitch structure of paper Fig. 3 computes exactly
+    this value (low bits of the finer operand pass through unchanged).
+    """
+    w = max(w_u, w_v)
+    return trunc_shift(u, w_u - w) + trunc_shift(v, w_v - w), w
+
+
+def horner_fixed(
+    a_int: Sequence[np.ndarray],
+    b_int: np.ndarray,
+    x_int: np.ndarray,
+    cfg: FWLConfig,
+    *,
+    return_pre_b: bool = False,
+):
+    """Evaluate the order-n fixed-point Horner datapath.
+
+    Args:
+      a_int: list of n integer coefficient arrays; a_int[i] has FWL
+        cfg.w_a[i].  Arrays broadcast against each other and against a
+        trailing grid axis (x_int is broadcast on the last axis).
+      b_int: intercept integers at FWL cfg.w_b (broadcastable like a_int).
+      x_int: input grid integers at FWL cfg.w_in, shape (..., G).
+      return_pre_b: also return (h_n, fwl) before the intercept add — used
+        by the quantizer's error-flattening step.
+
+    Returns:
+      out_int with FWL cfg.w_out (plus optional pre-b tuple).
+    """
+    n = cfg.order
+    if len(a_int) != n:
+        raise ValueError(f"expected {n} coefficient arrays, got {len(a_int)}")
+    x = np.asarray(x_int)
+
+    def _trunc(v, shift):
+        if cfg.round_mults and shift > 0:
+            v = v + (1 << (shift - 1))
+        return trunc_shift(v, shift)
+
+    # stage 1 multiplier: a1 * x, truncate to w_o[0]
+    h = _trunc(np.asarray(a_int[0])[..., None] * x,
+               cfg.w_a[0] + cfg.w_in - cfg.w_o[0])
+    cur = cfg.w_o[0]
+
+    for i in range(1, n):
+        g, wg = concat_add(h, cur, np.asarray(a_int[i])[..., None], cfg.w_a[i])
+        h = _trunc(g * x, wg + cfg.w_in - cfg.w_o[i])
+        cur = cfg.w_o[i]
+
+    pre_b = (h, cur)
+    out, w_sum = concat_add(h, cur, np.asarray(b_int)[..., None], cfg.w_b)
+    out = trunc_shift(out, w_sum - cfg.w_out)
+    if return_pre_b:
+        return out, pre_b
+    return out

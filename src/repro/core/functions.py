@@ -1,0 +1,149 @@
+"""Nonlinear activation function (NAF) zoo for PPA fitting.
+
+Every entry provides a float64 numpy callable plus metadata used by the
+model-integration layer: the canonical approximation interval, symmetry
+rules for range reduction, and saturation behaviour outside the interval.
+
+The paper's experiments use sigmoid/tanh on [0, 1); the framework adds the
+functions the assigned architectures actually evaluate (SiLU gates, GELU,
+exp2 for softmax, softplus for SSM deltas, ...), all driven by the same FQA
+machinery.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, Optional, Tuple
+
+import numpy as np
+
+__all__ = ["NAFSpec", "NAF_REGISTRY", "get_naf"]
+
+
+@dataclasses.dataclass(frozen=True)
+class NAFSpec:
+    """Metadata for one scalar nonlinearity.
+
+    Attributes:
+      fn: float64 elementwise callable.
+      interval: canonical (xs, xe) fitting interval (end-exclusive).
+      symmetry: None | "odd" | "sigmoid" | "minus_x" — how f(-x) maps to f(x):
+        odd:      f(-x) = -f(x)            (tanh, ...)
+        sigmoid:  f(-x) = 1 - f(x)
+        minus_x:  f(-x) = f(x) - x         (softplus, silu)
+      sat_lo/sat_hi: value the model-integration layer clamps to outside
+        [lo_x, hi_x) after range reduction (None = clamp to f(boundary)).
+      sat_identity: saturate to x itself above the interval (softplus, silu).
+      out_range: (min, max) of f over the interval — used for output WL
+        integer-bit sizing.
+    """
+
+    name: str
+    fn: Callable[[np.ndarray], np.ndarray]
+    interval: Tuple[float, float]
+    symmetry: Optional[str] = None
+    sat_hi: Optional[float] = None
+    sat_identity: bool = False
+    out_range: Tuple[float, float] = (0.0, 1.0)
+    doc: str = ""
+
+    def __call__(self, x):
+        return self.fn(np.asarray(x, dtype=np.float64))
+
+
+def _sigmoid(x):
+    return 1.0 / (1.0 + np.exp(-x))
+
+
+def _tanh(x):
+    return np.tanh(x)
+
+
+def _exp2(x):
+    return np.exp2(x)
+
+
+def _expm(x):  # exp on negative half-line (softmax after max-subtraction)
+    return np.exp(x)
+
+
+def _gelu(x):
+    # exact (erf) gelu
+    return 0.5 * x * (1.0 + np.vectorize(math.erf)(x / math.sqrt(2.0)))
+
+
+def _gelu_inner(x):
+    # the scalar nonlinearity inside gelu: Phi(x) = 0.5*(1+erf(x/sqrt2));
+    # gelu(x) = x * Phi(x), mirroring how silu(x) = x * sigmoid(x).
+    return 0.5 * (1.0 + np.vectorize(math.erf)(x / math.sqrt(2.0)))
+
+
+def _softplus(x):
+    return np.log1p(np.exp(-np.abs(x))) + np.maximum(x, 0.0)
+
+
+def _silu(x):
+    return x * _sigmoid(x)
+
+
+def _recip(x):
+    return 1.0 / x
+
+
+def _rsqrt(x):
+    return 1.0 / np.sqrt(x)
+
+
+def _log2(x):
+    return np.log2(x)
+
+
+NAF_REGISTRY: Dict[str, NAFSpec] = {}
+
+
+def _reg(spec: NAFSpec) -> NAFSpec:
+    NAF_REGISTRY[spec.name] = spec
+    return spec
+
+
+# --- paper targets -----------------------------------------------------------
+_reg(NAFSpec("sigmoid", _sigmoid, (0.0, 1.0), symmetry="sigmoid",
+             out_range=(0.5, 0.7311), doc="paper Table I/II target, [0,1)"))
+_reg(NAFSpec("tanh", _tanh, (0.0, 1.0), symmetry="odd",
+             out_range=(0.0, 0.7616), doc="paper Table II target, [0,1)"))
+
+# --- wide-domain variants used by the model layer ---------------------------
+_reg(NAFSpec("sigmoid_wide", _sigmoid, (0.0, 8.0), symmetry="sigmoid",
+             sat_hi=1.0, out_range=(0.5, 1.0),
+             doc="sigmoid on [0,8) + symmetry + saturation: SiLU gates"))
+_reg(NAFSpec("tanh_wide", _tanh, (0.0, 4.0), symmetry="odd",
+             sat_hi=1.0, out_range=(0.0, 1.0), doc="tanh on [0,4)"))
+_reg(NAFSpec("exp2_frac", _exp2, (0.0, 1.0),
+             out_range=(1.0, 2.0),
+             doc="2**x on [0,1): softmax exp via 2^(x log2 e) = 2^k * 2^frac"))
+_reg(NAFSpec("exp_neg", lambda x: np.exp(-x), (0.0, 16.0), sat_hi=0.0,
+             out_range=(0.0, 1.0), doc="e^-x on [0,16): direct softmax exp"))
+_reg(NAFSpec("gelu_inner", _gelu_inner, (0.0, 4.0), symmetry="sigmoid",
+             sat_hi=1.0, out_range=(0.5, 1.0),
+             doc="Phi(x); gelu(x) = x * Phi(x), whisper/ViT MLPs"))
+_reg(NAFSpec("softplus", _softplus, (0.0, 8.0), symmetry="minus_x",
+             sat_identity=True,
+             out_range=(0.0, 8.01), doc="softplus on [0,8): mamba delta"))
+_reg(NAFSpec("silu", _silu, (0.0, 8.0), symmetry="minus_x",
+             sat_identity=True,
+             out_range=(-0.28, 8.0), doc="direct silu fit (ablation vs x*sigmoid)"))
+_reg(NAFSpec("recip", _recip, (1.0, 2.0),
+             out_range=(0.5, 1.0), doc="1/x on [1,2): softmax denominator"))
+_reg(NAFSpec("rsqrt", _rsqrt, (1.0, 4.0),
+             out_range=(0.5, 1.0), doc="1/sqrt(x) on [1,4): rmsnorm (optional)"))
+_reg(NAFSpec("log2", _log2, (1.0, 2.0),
+             out_range=(0.0, 1.0), doc="log2 mantissa on [1,2)"))
+
+
+def get_naf(name: str) -> NAFSpec:
+    try:
+        return NAF_REGISTRY[name]
+    except KeyError as e:
+        raise KeyError(
+            f"unknown NAF {name!r}; available: {sorted(NAF_REGISTRY)}") from e

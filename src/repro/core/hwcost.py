@@ -1,0 +1,213 @@
+"""Analytic hardware cost model (area / power / delay proxy).
+
+This environment has no Synopsys DC, so we reproduce the paper's ASIC
+tables *relatively* with a unit-gate model whose constants are calibrated
+(least squares) against the paper's own Table VI + VII rows:
+
+  multiplier  ~ beta  * bits(op1)*bits(op2)      (array multiplier FAs)
+  adder       ~ alpha * bits                     (ripple/CLA linear term)
+  comparator  ~ gamma * bits * (s-1)             (index generator)
+  coeff LUT   ~ delta * stored row bits          (segments x entry width)
+  shift-mux   ~ mu    * m * bits                 (Sm配 select network)
+  base        ~ c0
+
+The model is used (a) to rank design points inside the FWL search exactly
+as the paper uses DC area, and (b) to reproduce Tables VI/VII as ratios.
+``benchmarks/table6_asic8.py`` reports model-vs-paper error per row.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .datapath import FWLConfig
+from .schemes import PPATable
+
+__all__ = ["HWCost", "cost_features", "estimate_cost", "CALIBRATION",
+           "calibrate", "PAPER_TABLE6", "PAPER_TABLE7"]
+
+
+@dataclasses.dataclass(frozen=True)
+class HWCost:
+    area_um2: float
+    power_mw: float
+    delay_ns: float
+    lut_bits: int
+    features: Tuple[float, ...] = ()
+
+
+def _bits_a(w_a: int) -> int:
+    return w_a + 2        # sign + ~1 integer bit for |a| < 2
+
+
+def _bits_x(w_in: int) -> int:
+    return w_in + 1
+
+
+def _bits_o(w_o: int) -> int:
+    return w_o + 2
+
+
+def cost_features(table: PPATable) -> np.ndarray:
+    """Feature vector [mult_fa, adder_bits, cmp_bits, lut_bits, shift_mux, 1]."""
+    cfg = table.cfg
+    s = table.num_segments
+    n = cfg.order
+    m = table.scheme.m_shifters
+
+    mult_fa = 0.0
+    adder_bits = 0.0
+    shift_mux = 0.0
+    # stage 1
+    if m is None:
+        mult_fa += _bits_a(cfg.w_a[0]) * _bits_x(cfg.w_in)
+    else:
+        # m shifters (wiring) + (m-1) adders at product width + select muxes
+        adder_bits += (m - 1) * _bits_o(cfg.w_o[0])
+        shift_mux += m * _bits_o(cfg.w_o[0])
+    cur = cfg.w_o[0]
+    for i in range(1, n):
+        w_m = max(cur, cfg.w_a[i])
+        # concat adder works at min(prev out, coeff) width (paper Fig. 3)
+        adder_bits += min(cur, cfg.w_a[i]) + 2
+        mult_fa += (w_m + 2) * _bits_x(cfg.w_in)
+        cur = cfg.w_o[i]
+    # final intercept adder
+    adder_bits += min(cur, cfg.w_b) + 2
+
+    cmp_bits = (s - 1) * _bits_x(cfg.w_in)
+    # coefficient LUT: shared rows only (paper's coefficient-unification)
+    row_bits = sum(_bits_a(w) for w in cfg.w_a) + (cfg.w_b + 2)
+    lut_bits = table.unique_lut_rows() * row_bits
+
+    return np.array([mult_fa, adder_bits, cmp_bits, lut_bits, shift_mux, 1.0])
+
+
+# --- paper ground truth (Tables VI / VII) ------------------------------------
+# rows: (tag, scheme_kind, n, m, w: (wi, wa, wo, wb, wout), segs,
+#        area_um2, delay_ns, power_mw)
+PAPER_TABLE6: List[dict] = [
+    dict(tag="FQA-O1", n=1, m=None, w_a=(7,), w_o=(8,), segs=18,
+         area=1581.2, delay=1.67, power=0.2185),
+    dict(tag="QPA-G1", n=1, m=None, w_a=(8,), w_o=(8,), segs=60,
+         area=4919.2, delay=2.0, power=0.8956),
+    dict(tag="PLAC", n=1, m=None, w_a=(8,), w_o=(8,), segs=144,
+         area=11419.6, delay=1.98, power=1.7293),
+    dict(tag="FQA-S2-O1", n=1, m=2, w_a=(8,), w_o=(8,), segs=24,
+         area=1595.2, delay=1.48, power=0.1777),
+    dict(tag="FQA-S4-O1", n=1, m=4, w_a=(8,), w_o=(8,), segs=18,
+         area=1398.4, delay=1.47, power=0.1849),
+    dict(tag="QPA-M1", n=1, m=1, w_a=(1,), w_o=(8,), segs=60,
+         area=3794.8, delay=1.8, power=0.6484),
+    dict(tag="ML-PLAC", n=1, m=1, w_a=(1,), w_o=(8,), segs=60,
+         area=3794.8, delay=1.8, power=0.6484),
+    dict(tag="FQA-O2", n=2, m=None, w_a=(6, 8), w_o=(8, 8), segs=10,
+         area=1496.8, delay=1.7, power=0.3012),
+    dict(tag="QPA-G2", n=2, m=None, w_a=(8, 8), w_o=(8, 8), segs=60,
+         area=6247.2, delay=2.0, power=1.103),
+    dict(tag="FQA-S1-O2", n=2, m=1, w_a=(8, 8), w_o=(8, 8), segs=13,
+         area=1360.79, delay=1.79, power=0.2247),
+    dict(tag="FQA-S3-O2", n=2, m=3, w_a=(8, 8), w_o=(8, 8), segs=10,
+         area=1294.0, delay=1.62, power=0.26),
+]
+for r in PAPER_TABLE6:
+    r.update(w_in=8, w_b=8, w_out=8)
+
+PAPER_TABLE7: List[dict] = [
+    dict(tag="FQA-O1", n=1, m=None, w_a=(16,), w_o=(16,), w_b=14, segs=33,
+         area=4307.59, delay=2.0, power=0.5775),
+    dict(tag="QPA-G1", n=1, m=None, w_a=(16,), w_o=(16,), w_b=16, segs=45,
+         area=5865.6, delay=2.0, power=1.1953),
+    dict(tag="FQA-S5-O1", n=1, m=5, w_a=(9,), w_o=(16,), w_b=16, segs=75,
+         area=6979.6, delay=2.0, power=0.6433),
+    dict(tag="FQA-O2", n=2, m=None, w_a=(8, 16), w_o=(16, 16), w_b=16,
+         segs=12, area=3105.59, delay=1.93, power=0.7919),
+    dict(tag="QPA-G2", n=2, m=None, w_a=(8, 16), w_o=(16, 16), w_b=16,
+         segs=23, area=4527.2, delay=2.0, power=1.3405),
+    dict(tag="FQA-S1-O2", n=2, m=1, w_a=(8, 16), w_o=(16, 16), w_b=16,
+         segs=18, area=2989.59, delay=2.0, power=0.5338),
+    dict(tag="FQA-S3-O2", n=2, m=3, w_a=(8, 16), w_o=(16, 16), w_b=16,
+         segs=12, area=2554.4, delay=1.98, power=0.5982),
+]
+for r in PAPER_TABLE7:
+    r.update(w_in=8, w_out=16)
+    r.setdefault("w_b", 16)
+
+
+def _features_from_row(r: dict) -> np.ndarray:
+    cfg = FWLConfig(w_in=r["w_in"], w_out=r["w_out"], w_a=tuple(r["w_a"]),
+                    w_o=tuple(r["w_o"]), w_b=r["w_b"])
+    n, m, s = r["n"], r["m"], r["segs"]
+    mult_fa = 0.0
+    adder_bits = 0.0
+    shift_mux = 0.0
+    if m is None:
+        mult_fa += _bits_a(cfg.w_a[0]) * _bits_x(cfg.w_in)
+    else:
+        adder_bits += (m - 1) * _bits_o(cfg.w_o[0])
+        shift_mux += m * _bits_o(cfg.w_o[0])
+    cur = cfg.w_o[0]
+    for i in range(1, n):
+        w_m = max(cur, cfg.w_a[i])
+        adder_bits += min(cur, cfg.w_a[i]) + 2
+        mult_fa += (w_m + 2) * _bits_x(cfg.w_in)
+        cur = cfg.w_o[i]
+    adder_bits += min(cur, cfg.w_b) + 2
+    cmp_bits = (s - 1) * _bits_x(cfg.w_in)
+    row_bits = sum(_bits_a(w) for w in cfg.w_a) + (cfg.w_b + 2)
+    # paper LUTs benefit from coefficient sharing; approximate shared rows
+    # as 0.85*s for FQA (wide candidate ranges) and s for the baselines.
+    shared = 0.85 * s if r["tag"].startswith("FQA") else float(s)
+    lut_bits = shared * row_bits
+    return np.array([mult_fa, adder_bits, cmp_bits, lut_bits, shift_mux, 1.0])
+
+
+def calibrate() -> Dict[str, np.ndarray]:
+    """Non-negative least-squares fit of unit costs to the paper tables."""
+    from scipy.optimize import nnls
+
+    rows = PAPER_TABLE6 + PAPER_TABLE7
+    X = np.stack([_features_from_row(r) for r in rows])
+    out = {}
+    for key in ("area", "power"):
+        y = np.array([r[key] for r in rows], dtype=np.float64)
+        # sqrt-relative weighting: balances fractional error on small rows
+        # against absolute error on large rows (pure-relative weighting
+        # degenerates the power fit to a single feature)
+        w = 1.0 / np.sqrt(y)
+        out[key] = nnls(X * w[:, None], y * w)[0]
+    # delay: critical path ~ c1*log2(s) (index) + c2*max mult width + c3
+    feats = np.stack([
+        np.array([np.log2(max(2, r["segs"])),
+                  max((max(cu, wa) + 2) for cu, wa in
+                      zip((r["w_o"][0],) + tuple(r["w_o"][1:]), r["w_a"])),
+                  1.0]) for r in rows])
+    yd = np.array([r["delay"] for r in rows])
+    out["delay"] = np.maximum(np.linalg.lstsq(feats, yd, rcond=None)[0], 0.0)
+    return out
+
+
+CALIBRATION: Optional[Dict[str, np.ndarray]] = None
+
+
+def estimate_cost(table: PPATable) -> HWCost:
+    """Price a compiled table with the calibrated unit-gate model."""
+    global CALIBRATION
+    if CALIBRATION is None:
+        CALIBRATION = calibrate()
+    f = cost_features(table)
+    area = float(f @ CALIBRATION["area"])
+    power = float(f @ CALIBRATION["power"])
+    cfg = table.cfg
+    cur = cfg.w_o[0]
+    widths = [max(cur, wa) + 2 for cur, wa in
+              zip((cfg.w_o[0],) + cfg.w_o[1:], cfg.w_a)]
+    df = np.array([np.log2(max(2, table.num_segments)), max(widths), 1.0])
+    delay = float(df @ CALIBRATION["delay"])
+    row_bits = sum(_bits_a(w) for w in cfg.w_a) + (cfg.w_b + 2)
+    return HWCost(area_um2=area, power_mw=power, delay_ns=delay,
+                  lut_bits=table.unique_lut_rows() * row_bits,
+                  features=tuple(f))

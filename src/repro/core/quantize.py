@@ -1,0 +1,309 @@
+"""Coefficient quantizers: FQA (this paper) and the baselines it beats.
+
+All quantizers share one contract: given a segment of the discrete input
+grid and the target function, produce integer datapath coefficients and the
+resulting MAE_hard, evaluated bit-exactly through ``datapath.horner_fixed``.
+
+  * ``FQAQuantizer``    — full-space search over the truncation-induced
+    offset range d (paper Eq. 4/5, Alg. 1/2), optional Hamming-weight
+    constraint on the first-stage coefficient (FQA-Sm-On).
+  * ``QPAQuantizer``    — round + per-coefficient ±1 fine-tuning [31].
+  * ``PLACQuantizer``   — plain round quantization [26].
+  * ``MLPLACQuantizer`` — PLAC with the slope word length bound to the
+    shifter count (multiplierless) [29].
+
+The intercept b is never searched: it is error-flattened then rounded
+(Alg. 1 lines 7-9), for every candidate coefficient set.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .datapath import FWLConfig, concat_add, horner_fixed
+from .fixed_point import hamming_weight, round_half_away, trunc_shift
+from .remez import fit_minimax
+
+__all__ = [
+    "SegmentFit",
+    "Quantizer",
+    "FQAQuantizer",
+    "QPAQuantizer",
+    "PLACQuantizer",
+    "MLPLACQuantizer",
+    "make_quantizer",
+]
+
+_EPS = 1e-12  # float-compare slack on MAE <= MAE_t tests
+
+
+@dataclasses.dataclass
+class SegmentFit:
+    """Result of quantizing one segment."""
+
+    ok: bool
+    mae: float
+    a_int: Tuple[int, ...]
+    b_int: int
+    mae0: float = np.inf          # max |f_q - h_q| (paper Eq. 7)
+    n_satisfying: int = 0
+    a_candidates: Optional[np.ndarray] = None  # (K, n) satisfying sets
+    b_candidates: Optional[np.ndarray] = None  # (K,)
+    evals: int = 0                # candidate evaluations performed
+
+
+class Quantizer:
+    """Base: candidate generation differs, evaluation is shared."""
+
+    name = "base"
+    #: error-flatten the intercept (Alg.1 lines 7-9).  PLAC quantizes the
+    #: software-fitted b directly instead [26].
+    flatten_b = True
+
+    def __init__(self, chunk: int = 64, store_cap: int = 8192):
+        self.chunk = chunk
+        self.store_cap = store_cap
+
+    # -- candidate generation (override) -------------------------------------
+    def _candidates(self, a_real: np.ndarray, cfg: FWLConfig
+                    ) -> List[np.ndarray]:
+        raise NotImplementedError
+
+    # -- shared evaluation ----------------------------------------------------
+    def fit_segment(
+        self,
+        x_int: np.ndarray,
+        f_vals: np.ndarray,
+        cfg: FWLConfig,
+        mae_t: float,
+        mode: str = "feasible",
+        a_real: Optional[np.ndarray] = None,
+    ) -> SegmentFit:
+        """Quantize one segment.
+
+        Args:
+          x_int: grid integers (G,), FWL cfg.w_in.
+          f_vals: float64 target values at the grid points.
+          mae_t: target MAE; ``ok`` means best MAE <= mae_t.
+          mode: "feasible" (early-exit on first satisfying candidate),
+                "best" (full scan, return argmin) or
+                "full" (also collect all satisfying candidate sets).
+          a_real: optional pre-quantization coefficients (skips Remez).
+        """
+        n = cfg.order
+        G = x_int.size
+        b_real = None
+        if a_real is None:
+            x_f = x_int.astype(np.float64) / (1 << cfg.w_in)
+            coeffs, b_real = fit_minimax(x_f, f_vals, degree=n)
+            a_real = np.asarray(coeffs, dtype=np.float64)
+
+        cands = self._candidates(a_real, cfg)
+        sizes = [c.size for c in cands]
+        if any(s == 0 for s in sizes):
+            return SegmentFit(False, np.inf, tuple(0 for _ in range(n)), 0)
+
+        f_q = round_half_away(f_vals * (1 << cfg.w_out)).astype(np.float64) \
+            / (1 << cfg.w_out)
+
+        best = SegmentFit(False, np.inf, tuple(0 for _ in range(n)), 0)
+        sat_a: List[np.ndarray] = []
+        sat_b: List[np.ndarray] = []
+        n_sat = 0
+        evals = 0
+
+        # chunk over the first-stage candidates; later stages broadcast.
+        first = cands[0]
+        rest = cands[1:]
+        rest_grid = np.meshgrid(*rest, indexing="ij") if rest else []
+        rest_flat = [g.reshape(-1) for g in rest_grid]  # (R,) each
+        R = rest_flat[0].size if rest_flat else 1
+
+        for c0 in range(0, first.size, self.chunk):
+            a0 = first[c0: c0 + self.chunk]          # (C,)
+            C = a0.size
+            # build (C*R,) per-stage candidate vectors
+            a_list = [np.repeat(a0, R)]
+            for rf in rest_flat:
+                a_list.append(np.tile(rf, C))
+            K = C * R
+            evals += K
+
+            h_pre, (hp, w_pre) = _horner_pre_b(a_list, x_int, cfg)
+            if self.flatten_b:
+                # error-flatten the intercept per candidate (Alg.1 lines 7-9)
+                e0 = f_vals[None, :] - hp.astype(np.float64) / (1 << w_pre)
+                b = 0.5 * (e0.max(axis=-1) + e0.min(axis=-1))
+                b_int = round_half_away(b * (1 << cfg.w_b))
+            else:
+                if b_real is None:
+                    x_f = x_int.astype(np.float64) / (1 << cfg.w_in)
+                    _, b_real = fit_minimax(x_f, f_vals, degree=n)
+                b_int = np.full(K, round_half_away(b_real * (1 << cfg.w_b)),
+                                dtype=np.int64)
+            out, w_sum = concat_add(hp, w_pre, b_int[:, None], cfg.w_b)
+            out = trunc_shift(out, w_sum - cfg.w_out)
+            y = out.astype(np.float64) / (1 << cfg.w_out)
+            err = np.abs(f_vals[None, :] - y)
+            mae = err.max(axis=-1)                    # (K,)
+
+            k = int(np.argmin(mae))
+            if mae[k] < best.mae:
+                mae0 = float(np.abs(f_q[None, :] - y[k]).max())
+                best = SegmentFit(
+                    ok=bool(mae[k] <= mae_t + _EPS),
+                    mae=float(mae[k]),
+                    a_int=tuple(int(a[k]) for a in a_list),
+                    b_int=int(b_int[k]),
+                    mae0=mae0,
+                )
+            good = mae <= mae_t + _EPS
+            ng = int(good.sum())
+            n_sat += ng
+            if mode == "full" and ng and len(sat_a) * self.chunk <= self.store_cap:
+                sat_a.append(np.stack([a[good] for a in a_list], axis=-1))
+                sat_b.append(b_int[good])
+            if mode == "feasible" and best.ok:
+                break
+
+        best.n_satisfying = n_sat
+        best.evals = evals
+        if mode == "full" and sat_a:
+            best.a_candidates = np.concatenate(sat_a)[: self.store_cap]
+            best.b_candidates = np.concatenate(sat_b)[: self.store_cap]
+        return best
+
+    # -- helpers ---------------------------------------------------------------
+    @staticmethod
+    def _round_int(a_real: np.ndarray, w: Sequence[int]) -> List[int]:
+        return [int(round_half_away(a * (1 << wi)))
+                for a, wi in zip(a_real, w)]
+
+
+def _horner_pre_b(a_list, x_int, cfg):
+    """horner_fixed with b=0, returning the pre-intercept value."""
+    zero_b = np.zeros(a_list[0].shape, dtype=np.int64)
+    out, pre = horner_fixed([np.asarray(a) for a in a_list], zero_b,
+                            x_int, cfg, return_pre_b=True)
+    return out, pre
+
+
+def _centered(lo: int, hi: int) -> np.ndarray:
+    """Integers lo..hi ordered by |d| (so early-exit hits d≈0 first)."""
+    d = np.arange(lo, hi + 1, dtype=np.int64)
+    return d[np.argsort(np.abs(d), kind="stable")]
+
+
+class FQAQuantizer(Quantizer):
+    """Full-space quantization search (the paper's contribution).
+
+    extended=True uses the paper's extended range [-2^k, 2^{k+1}] (needed to
+    cover the negative deviations of Table I and to enumerate equivalent
+    optima); False uses the base [0, 2^k].
+    weight_limit=m adds the FQA-Sm-On Hamming-weight constraint
+    w_H(a_1,q) <= m (paper Eq. 11); weight_fn selects popcount vs CSD.
+    """
+
+    name = "fqa"
+
+    def __init__(self, extended: bool = True,
+                 weight_limit: Optional[int] = None,
+                 weight_fn: Callable = hamming_weight,
+                 **kw):
+        super().__init__(**kw)
+        self.extended = extended
+        self.weight_limit = weight_limit
+        self.weight_fn = weight_fn
+
+    def _candidates(self, a_real, cfg):
+        out = []
+        for i in range(cfg.order):
+            k = cfg.d_bits(i)
+            base = int(np.floor(a_real[i] * (1 << cfg.w_a[i])))
+            base = (base >> k) << k if k > 0 else base
+            if self.extended:
+                lo, hi = -(1 << k), (1 << (k + 1))
+            else:
+                lo, hi = 0, (1 << k)
+            cand = base + _centered(lo, hi)
+            if i == 0 and self.weight_limit is not None:
+                cand = cand[self.weight_fn(cand) <= self.weight_limit]
+            out.append(cand)
+        return out
+
+
+class QPAQuantizer(Quantizer):
+    """Round + ±fine_tune offsets per coefficient (QPA [31])."""
+
+    name = "qpa"
+
+    def __init__(self, fine_tune: int = 1, **kw):
+        super().__init__(**kw)
+        self.fine_tune = fine_tune
+
+    def _candidates(self, a_real, cfg):
+        out = []
+        for i in range(cfg.order):
+            base = int(round_half_away(a_real[i] * (1 << cfg.w_a[i])))
+            out.append(base + _centered(-self.fine_tune, self.fine_tune))
+        return out
+
+
+class PLACQuantizer(Quantizer):
+    """Plain round quantization (PLAC [26]): no coefficient search and the
+    software-fitted intercept is quantized directly (no error flattening)."""
+
+    name = "plac"
+    flatten_b = False
+
+    def _candidates(self, a_real, cfg):
+        return [np.array([int(round_half_away(a_real[i] * (1 << cfg.w_a[i])))],
+                         dtype=np.int64)
+                for i in range(cfg.order)]
+
+
+class MLPLACQuantizer(Quantizer):
+    """Multiplierless PLAC [29]: slope WL bound to the shifter count m.
+
+    The effective first-stage coefficient grid is 2^-m; we round to the
+    nearest representable value (and its neighbours, matching the paper's
+    SQ-style slope quantization + intercept readjustment).
+    """
+
+    name = "mlplac"
+
+    def __init__(self, m: int = 1, **kw):
+        super().__init__(**kw)
+        self.m = m
+
+    def _candidates(self, a_real, cfg):
+        out = []
+        for i in range(cfg.order):
+            w_eff = min(self.m, cfg.w_a[i]) if i == 0 else cfg.w_a[i]
+            scale = cfg.w_a[i] - w_eff
+            base = int(round_half_away(a_real[i] * (1 << w_eff))) << scale
+            if i == 0:
+                out.append(np.array(
+                    [base, base + (1 << scale), base - (1 << scale)],
+                    dtype=np.int64))
+            else:
+                out.append(np.array([base], dtype=np.int64))
+        return out
+
+
+def make_quantizer(name: str, **kw) -> Quantizer:
+    table = {
+        "fqa": lambda: FQAQuantizer(**kw),
+        "fqa_fast": lambda: FQAQuantizer(extended=False, **kw),
+        "qpa": lambda: QPAQuantizer(**kw),
+        "plac": lambda: PLACQuantizer(**kw),
+        "mlplac": lambda: MLPLACQuantizer(**kw),
+    }
+    try:
+        return table[name]()
+    except KeyError as e:
+        raise KeyError(f"unknown quantizer {name!r}") from e

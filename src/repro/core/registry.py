@@ -1,0 +1,70 @@
+"""Compiled-table registry: content-addressed disk cache for PPATables.
+
+Model configs reference activations by (naf, scheme, fwl) key; compiling
+an FQA table takes seconds-to-minutes, so tables are cached under
+``REPRO_TABLE_CACHE`` (default: <repo>/artifacts/ppa_tables) and shared by
+tests, benchmarks, examples and the serving engine.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+from pathlib import Path
+from typing import Optional, Tuple
+
+from .datapath import FWLConfig
+from .schemes import PPAScheme, PPATable, compile_ppa_table
+
+__all__ = ["table_key", "get_table", "cache_dir", "DEFAULT_SCHEMES"]
+
+# sensible default schemes per deployment precision (order/quantizer chosen
+# from the paper's own conclusions: O2 for 16-bit out, Sm-O1 for 8-bit)
+DEFAULT_SCHEMES = {
+    8: (PPAScheme(order=1, m_shifters=4, quantizer="fqa"),
+        FWLConfig(w_in=8, w_out=8, w_a=(8,), w_o=(8,), w_b=8)),
+    16: (PPAScheme(order=2, quantizer="fqa"),
+         FWLConfig(w_in=8, w_out=16, w_a=(8, 16), w_o=(16, 16), w_b=16)),
+}
+
+
+def cache_dir() -> Path:
+    d = os.environ.get("REPRO_TABLE_CACHE")
+    if d:
+        p = Path(d)
+    else:
+        p = Path(__file__).resolve().parents[3] / "artifacts" / "ppa_tables"
+    p.mkdir(parents=True, exist_ok=True)
+    return p
+
+
+def table_key(naf: str, cfg: FWLConfig, scheme: PPAScheme,
+              mae_t: Optional[float], interval: Optional[Tuple[float, float]]
+              ) -> str:
+    blob = json.dumps({
+        "naf": naf, "cfg": cfg.as_dict(),
+        "scheme": [scheme.order, scheme.m_shifters, scheme.quantizer,
+                   scheme.weight, scheme.segmenter],
+        "mae_t": mae_t, "interval": interval, "v": 2,
+    }, sort_keys=True)
+    return hashlib.sha1(blob.encode()).hexdigest()[:16]
+
+
+def get_table(naf: str, cfg: FWLConfig, scheme: PPAScheme = PPAScheme(),
+              *, mae_t: Optional[float] = None,
+              interval: Optional[Tuple[float, float]] = None,
+              use_cache: bool = True) -> PPATable:
+    key = table_key(naf, cfg, scheme, mae_t, interval)
+    path = cache_dir() / f"{naf}-{scheme.tag}-{key}.json"
+    if use_cache and path.exists():
+        try:
+            return PPATable.load(path)
+        except Exception:
+            path.unlink(missing_ok=True)
+    tab = compile_ppa_table(naf, cfg, scheme, mae_t=mae_t, interval=interval)
+    if use_cache:
+        tmp = path.with_suffix(".tmp")
+        tmp.write_text(tab.to_json())
+        os.replace(tmp, path)  # atomic
+    return tab

@@ -1,0 +1,146 @@
+"""Minimax polynomial fitting (discrete Remez exchange).
+
+Produces the *pre-quantization* coefficients the FQA quantizer starts from.
+Per the paper (Sec. III-C): because FQA searches the full low-bit offset
+space, only the coefficient bits above the search space need to be accurate,
+so a handful of exchange iterations suffices.
+
+Coefficient order matches the paper's Horner form (Eq. 1):
+    h(x) = (...((a1*x + a2)*x + a3)...)*x + b
+i.e. ``coeffs = [a1, ..., an]`` (a1 multiplies x**n) and the constant ``b``.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Sequence, Tuple
+
+import numpy as np
+
+__all__ = ["fit_minimax", "horner", "chebyshev_init"]
+
+
+def horner(coeffs: Sequence[float], b: float, x: np.ndarray) -> np.ndarray:
+    """Evaluate the paper-form polynomial at ``x`` (float64)."""
+    x = np.asarray(x, dtype=np.float64)
+    h = np.full_like(x, float(coeffs[0]))
+    for c in coeffs[1:]:
+        h = h * x + float(c)
+    return h * x + float(b) if len(coeffs) >= 1 else np.full_like(x, float(b))
+
+
+def chebyshev_init(x: np.ndarray, f: np.ndarray, degree: int) -> np.ndarray:
+    """Least-squares polynomial init (power basis, highest degree first)."""
+    # Vandermonde least squares is plenty stable for degree <= 3 on the
+    # short, shifted segments PPA uses (we centre x for conditioning).
+    x = np.asarray(x, dtype=np.float64)
+    mid = 0.5 * (x.max() + x.min()) if x.size else 0.0
+    xc = x - mid
+    V = np.vander(xc, degree + 1)  # columns: xc^degree ... xc^0
+    sol, *_ = np.linalg.lstsq(V, f, rcond=None)
+    # shift back: p(xc) = p(x - mid) -> expand into power basis of x
+    return _shift_poly(sol, -mid)
+
+
+def _shift_poly(coeffs_high_first: np.ndarray, shift: float) -> np.ndarray:
+    """Return coefficients (high first) of q(x) = p(x + shift)."""
+    p = np.polynomial.Polynomial(np.asarray(coeffs_high_first)[::-1])
+    q = p(np.polynomial.Polynomial([shift, 1.0]))
+    out = np.zeros(len(coeffs_high_first))
+    out[: len(q.coef)] = q.coef[: len(out)]
+    return out[::-1]  # back to high-first
+
+
+def fit_minimax(
+    x: np.ndarray,
+    f: np.ndarray,
+    degree: int,
+    max_iter: int = 12,
+) -> Tuple[np.ndarray, float]:
+    """Discrete minimax fit of a degree-``degree`` polynomial on grid points.
+
+    Returns ``(coeffs, b)`` in paper order ([a1..an], b).  For degenerate
+    grids (fewer points than coefficients) falls back to interpolation /
+    constants — those segments are exactly representable anyway.
+    """
+    x = np.asarray(x, dtype=np.float64)
+    f = np.asarray(f, dtype=np.float64)
+    G = x.size
+    ncoef = degree + 1
+
+    if G == 0:
+        return np.zeros(max(degree, 0)), 0.0
+    if G <= ncoef:
+        # interpolate exactly through the available points
+        deg_eff = G - 1
+        cs = np.polyfit(x, f, deg_eff) if deg_eff > 0 else np.array([f[0]])
+        full = np.zeros(ncoef)
+        full[ncoef - len(cs):] = cs
+        return full[:-1], float(full[-1])
+
+    # --- Remez exchange on the discrete grid --------------------------------
+    # reference set: chebyshev-like spread of n+2 grid indices
+    m = ncoef + 1
+    t = np.cos(np.pi * np.arange(m)[::-1] / (m - 1))  # [-1, 1]
+    idx = np.unique(np.round((t + 1) / 2 * (G - 1)).astype(int))
+    while idx.size < m:  # ensure m distinct indices
+        missing = np.setdiff1d(np.arange(G), idx)
+        idx = np.sort(np.concatenate([idx, missing[: m - idx.size]]))
+
+    coeffs = chebyshev_init(x, f, degree)
+    best = (np.inf, coeffs)
+    for _ in range(max_iter):
+        xr, fr = x[idx], f[idx]
+        # solve p(xr_i) + (-1)^i E = fr_i
+        V = np.vander(xr - xr.mean(), ncoef)
+        signs = np.power(-1.0, np.arange(m))
+        A = np.concatenate([V, signs[:, None]], axis=1)
+        try:
+            sol = np.linalg.solve(A, fr)
+        except np.linalg.LinAlgError:
+            break
+        c_shift = sol[:ncoef]
+        coeffs = _shift_poly(c_shift, -xr.mean())
+        err = np.polyval(coeffs, x) - f
+        emax = float(np.max(np.abs(err)))
+        if emax < best[0]:
+            best = (emax, coeffs.copy())
+        # multi-point exchange: local extrema of the error with alternating sign
+        new_idx = _pick_extrema(err, m)
+        if new_idx is None or np.array_equal(new_idx, idx):
+            break
+        idx = new_idx
+
+    coeffs = best[1]
+    return coeffs[:-1], float(coeffs[-1])
+
+
+def _pick_extrema(err: np.ndarray, m: int):
+    """Pick m alternating-sign extrema indices of the error signal."""
+    G = err.size
+    # local extrema (including endpoints)
+    cand = [0]
+    for i in range(1, G - 1):
+        if (err[i] - err[i - 1]) * (err[i + 1] - err[i]) <= 0:
+            cand.append(i)
+    cand.append(G - 1)
+    cand = np.unique(cand)
+    # greedily keep the largest-magnitude alternating subsequence
+    order = cand[np.argsort(-np.abs(err[cand]))]
+    picked: list[int] = []
+    for i in order:
+        s = np.sign(err[i])
+        ok = True
+        for j in picked:
+            if np.sign(err[j]) == s and abs(i - j) < max(1, G // (4 * m)):
+                ok = False
+                break
+        if ok:
+            picked.append(int(i))
+        if len(picked) == m:
+            break
+    if len(picked) < m:
+        extra = [int(i) for i in cand if int(i) not in picked]
+        picked.extend(extra[: m - len(picked)])
+    if len(picked) < m:
+        return None
+    return np.sort(np.array(picked[:m]))

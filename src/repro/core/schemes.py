@@ -1,0 +1,220 @@
+"""PPA scheme compilation: FQA-On / FQA-Sm-On -> PPATable artifacts.
+
+A ``PPATable`` is the deployable result of the whole software pipeline
+(fit -> quantize -> segment): segment boundaries + integer coefficient LUT +
+FWL config.  It is what the hardware (here: the Pallas kernel / jnp ref op)
+consumes, what the cost model prices, and what checkpoints/configs reference.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+from pathlib import Path
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .datapath import FWLConfig, horner_fixed
+from .fixed_point import (grid_for_interval, hamming_weight,
+                          min_signed_digits, round_half_away)
+from .functions import NAFSpec, get_naf
+from .quantize import (FQAQuantizer, Quantizer, make_quantizer)
+from .segmentation import (Segment, SegmentEvaluator, bisection_segment,
+                           sequential_segment, tbw_segment)
+
+__all__ = ["PPAScheme", "PPATable", "compile_ppa_table", "eval_table_int",
+           "table_mae_report"]
+
+
+@dataclasses.dataclass(frozen=True)
+class PPAScheme:
+    """FQA-On (m_shifters=None) or FQA-Sm-On (m_shifters=m) + quantizer."""
+
+    order: int = 1
+    m_shifters: Optional[int] = None
+    quantizer: str = "fqa"           # fqa | fqa_fast | qpa | plac | mlplac
+    weight: str = "hamming"          # hamming | csd (Sm constraint metric)
+    segmenter: str = "tbw"           # tbw | bisection | sequential
+
+    @property
+    def tag(self) -> str:
+        base = (f"S{self.m_shifters}-O{self.order}" if self.m_shifters
+                else f"O{self.order}")
+        return f"{self.quantizer.upper()}-{base}"
+
+    def build_quantizer(self) -> Quantizer:
+        kw = {}
+        if self.quantizer in ("fqa", "fqa_fast") and self.m_shifters:
+            kw["weight_limit"] = self.m_shifters
+            kw["weight_fn"] = (hamming_weight if self.weight == "hamming"
+                               else min_signed_digits)
+        if self.quantizer == "mlplac" and self.m_shifters:
+            kw["m"] = self.m_shifters
+        return make_quantizer(self.quantizer, **kw)
+
+
+@dataclasses.dataclass
+class PPATable:
+    """Compiled piecewise-polynomial table (the deployable artifact)."""
+
+    naf: str
+    interval: Tuple[float, float]
+    cfg: FWLConfig
+    scheme: PPAScheme
+    starts_int: np.ndarray      # (S,) segment start x (int, FWL w_in)
+    a_int: np.ndarray           # (S, n) stage coefficients, FWL cfg.w_a[i]
+    b_int: np.ndarray           # (S,)
+    mae_hard: float
+    mae_t: float
+    stats: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    @property
+    def num_segments(self) -> int:
+        return int(self.starts_int.shape[0])
+
+    @property
+    def order(self) -> int:
+        return int(self.a_int.shape[1])
+
+    def unique_lut_rows(self) -> int:
+        """LUT entries after coefficient sharing across segments."""
+        rows = {tuple(r) for r in
+                np.concatenate([self.a_int, self.b_int[:, None]], axis=1)}
+        return len(rows)
+
+    # -- serialization --------------------------------------------------------
+    def to_json(self) -> str:
+        d = {
+            "naf": self.naf, "interval": list(self.interval),
+            "cfg": self.cfg.as_dict(),
+            "scheme": dataclasses.asdict(self.scheme),
+            "starts_int": self.starts_int.tolist(),
+            "a_int": self.a_int.tolist(),
+            "b_int": self.b_int.tolist(),
+            "mae_hard": self.mae_hard, "mae_t": self.mae_t,
+            "stats": self.stats,
+        }
+        return json.dumps(d)
+
+    @staticmethod
+    def from_json(s: str) -> "PPATable":
+        d = json.loads(s)
+        cfg = d["cfg"]
+        cfg["w_a"] = tuple(cfg["w_a"])
+        cfg["w_o"] = tuple(cfg["w_o"])
+        return PPATable(
+            naf=d["naf"], interval=tuple(d["interval"]),
+            cfg=FWLConfig(**cfg), scheme=PPAScheme(**d["scheme"]),
+            starts_int=np.asarray(d["starts_int"], dtype=np.int64),
+            a_int=np.asarray(d["a_int"], dtype=np.int64),
+            b_int=np.asarray(d["b_int"], dtype=np.int64),
+            mae_hard=d["mae_hard"], mae_t=d["mae_t"], stats=d["stats"])
+
+    def save(self, path: str | Path) -> None:
+        Path(path).write_text(self.to_json())
+
+    @staticmethod
+    def load(path: str | Path) -> "PPATable":
+        return PPATable.from_json(Path(path).read_text())
+
+
+def compile_ppa_table(
+    naf: str | NAFSpec,
+    cfg: FWLConfig,
+    scheme: PPAScheme = PPAScheme(),
+    *,
+    mae_t: Optional[float] = None,
+    interval: Optional[Tuple[float, float]] = None,
+    tseg: Optional[int] = None,
+    final_mode: str = "best",
+) -> PPATable:
+    """Run fit -> quantize -> segment for one NAF and pack the table.
+
+    mae_t defaults to the half-ULP quantization floor 2^-(w_out+1) — the
+    paper's "minimum achievable value for the current precision".
+    """
+    spec = get_naf(naf) if isinstance(naf, str) else naf
+    interval = interval or spec.interval
+    if mae_t is None:
+        mae_t = 0.5 ** (cfg.w_out + 1)
+
+    x_int = grid_for_interval(interval[0], interval[1], cfg.w_in)
+    f_vals = spec(x_int.astype(np.float64) / (1 << cfg.w_in))
+    quant = scheme.build_quantizer()
+    ev = SegmentEvaluator(x_int, f_vals, cfg, quant, mae_t)
+
+    if scheme.segmenter == "tbw":
+        if tseg is None:
+            # paper step 1: reference run with the search disabled (d=0)
+            ref_q = make_quantizer("plac")
+            ev_ref = SegmentEvaluator(x_int, f_vals, cfg, ref_q, mae_t)
+            try:
+                seg_ref = len(bisection_segment(ev_ref, final_mode="feasible"))
+            except RuntimeError:
+                seg_ref = max(4, x_int.size // 8)  # d=0 infeasible somewhere
+            tseg = 1 << max(0, int(round(math.log2(max(1, seg_ref)))))
+        segments = tbw_segment(ev, tseg, final_mode=final_mode)
+    elif scheme.segmenter == "bisection":
+        segments = bisection_segment(ev, final_mode=final_mode)
+    elif scheme.segmenter == "sequential":
+        segments = sequential_segment(ev, final_mode=final_mode)
+    else:
+        raise ValueError(f"unknown segmenter {scheme.segmenter!r}")
+
+    starts = np.array([x_int[s.start] for s in segments], dtype=np.int64)
+    a = np.array([s.fit.a_int for s in segments], dtype=np.int64)
+    b = np.array([s.fit.b_int for s in segments], dtype=np.int64)
+    mae_hard = max(s.fit.mae for s in segments)
+
+    f_q = round_half_away(f_vals * (1 << cfg.w_out)) / (1 << cfg.w_out)
+    table = PPATable(
+        naf=spec.name, interval=tuple(interval), cfg=cfg, scheme=scheme,
+        starts_int=starts, a_int=a, b_int=b,
+        mae_hard=float(mae_hard), mae_t=float(mae_t),
+        stats={
+            "mae_q": float(np.abs(f_q - f_vals).max()),
+            "mae0": float(max(s.fit.mae0 for s in segments)),
+            "segment_evals": ev.calls,
+            "candidate_evals": ev.cand_evals,
+            "points_touched": ev.points_touched,
+            "tseg": float(tseg or 0),
+        })
+    # cross-check: golden re-evaluation of the packed table
+    y = eval_table_int(table, x_int)
+    re_mae = float(np.abs(f_vals - y / (1 << cfg.w_out)).max())
+    table.stats["mae_recheck"] = re_mae
+    if re_mae > mae_hard + 1e-12:
+        raise AssertionError(
+            f"packed-table MAE {re_mae} exceeds per-segment MAE {mae_hard}")
+    return table
+
+
+def eval_table_int(table: PPATable, x_int: np.ndarray) -> np.ndarray:
+    """Golden numpy evaluation of a packed table on integer inputs."""
+    x = np.asarray(x_int, dtype=np.int64)
+    idx = np.searchsorted(table.starts_int, x, side="right") - 1
+    idx = np.clip(idx, 0, table.num_segments - 1)
+    a_list = [table.a_int[idx, i] for i in range(table.order)]
+    b = table.b_int[idx]
+    out = horner_fixed(a_list, b, x[..., None], table.cfg)
+    return out[..., 0]
+
+
+def table_mae_report(table: PPATable, oversample: int = 1) -> Dict[str, float]:
+    """Recompute MAE_hard / MAE_0 / MAE_q for a table (optionally on a finer
+    float grid to sanity-check interpolation behaviour between grid points)."""
+    spec = get_naf(table.naf)
+    cfg = table.cfg
+    x_int = grid_for_interval(table.interval[0], table.interval[1], cfg.w_in)
+    f = spec(x_int.astype(np.float64) / (1 << cfg.w_in))
+    y = eval_table_int(table, x_int) / (1 << cfg.w_out)
+    f_q = round_half_away(f * (1 << cfg.w_out)) / (1 << cfg.w_out)
+    return {
+        "mae_hard": float(np.abs(f - y).max()),
+        "mae0": float(np.abs(f_q - y).max()),
+        "mae_q": float(np.abs(f_q - f).max()),
+        "segments": table.num_segments,
+        "lut_rows": table.unique_lut_rows(),
+    }

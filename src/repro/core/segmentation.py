@@ -1,0 +1,191 @@
+"""Segmentation strategies: TBW (this paper), PLAC bisection, Sun sequential.
+
+All operate over the discrete input grid (indices 0..NUM-1) and share a
+``SegmentEvaluator`` that answers "can one polynomial cover grid[i..j]
+within MAE_t?" through a pluggable quantizer.  Evaluator calls are counted
+— the paper's Eq. (8)-(10) speedup claims are benchmarked from these
+counters (benchmarks/tbw_speedup.py).
+
+TBW (target-guided bisection window, paper Fig. 5): a pre-estimated target
+segment count tSEG gives a uniform window width INT = NUM/tSEG; segments
+grow window-by-window while they fit and fall back to ceil-midpoint
+bisection between the last good end (lp) and the first bad end (rp) once
+they don't.  The degenerate single-point segment (rp == lp+1 shrink rule)
+is handled, which PLAC's bisection misses.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, List, Optional, Tuple
+
+import numpy as np
+
+from .datapath import FWLConfig
+from .quantize import Quantizer, SegmentFit
+
+__all__ = [
+    "Segment",
+    "SegmentEvaluator",
+    "tbw_segment",
+    "bisection_segment",
+    "sequential_segment",
+    "estimate_tseg",
+]
+
+
+@dataclasses.dataclass
+class Segment:
+    start: int            # grid index, inclusive
+    end: int              # grid index, inclusive
+    fit: SegmentFit
+
+
+class SegmentEvaluator:
+    """Caches f on the grid and dispatches segment fits to the quantizer."""
+
+    def __init__(self, x_int: np.ndarray, f_vals: np.ndarray,
+                 cfg: FWLConfig, quantizer: Quantizer, mae_t: float):
+        self.x_int = np.asarray(x_int, dtype=np.int64)
+        self.f_vals = np.asarray(f_vals, dtype=np.float64)
+        self.cfg = cfg
+        self.quantizer = quantizer
+        self.mae_t = float(mae_t)
+        self.calls = 0          # segment evaluations
+        self.cand_evals = 0     # candidate-set evaluations inside quantizer
+        self.points_touched = 0
+
+    @property
+    def num(self) -> int:
+        return self.x_int.size
+
+    def evaluate(self, start: int, end: int, mode: str = "feasible"
+                 ) -> SegmentFit:
+        """Fit grid[start..end] inclusive."""
+        self.calls += 1
+        self.points_touched += end - start + 1
+        fit = self.quantizer.fit_segment(
+            self.x_int[start: end + 1], self.f_vals[start: end + 1],
+            self.cfg, self.mae_t, mode=mode)
+        self.cand_evals += fit.evals
+        return fit
+
+
+def _finalize(ev: SegmentEvaluator, start: int, end: int,
+              final_mode: str) -> Segment:
+    fit = ev.evaluate(start, end, mode=final_mode)
+    if not fit.ok:
+        raise RuntimeError(
+            f"segment [{start},{end}] regressed on final fit — "
+            "feasible/best mode disagreement (bug)")
+    return Segment(start, end, fit)
+
+
+def tbw_segment(ev: SegmentEvaluator, tseg: int,
+                final_mode: str = "best",
+                max_segments: Optional[int] = None) -> List[Segment]:
+    """Target-guided bisection window segmentation (paper Fig. 5)."""
+    num = ev.num
+    if tseg <= 0:
+        raise ValueError("tseg must be positive")
+    interval = max(1, num // tseg)   # INT, uniform window width
+
+    segments: List[Segment] = []
+    j = 0                # start of the remaining interval (0-based)
+    ep = -1              # carried across segments per the paper's flow
+    while j < num:
+        lp, rp = j, num - 1
+        sp = j
+        rflag = 1
+        # initial window: one uniform stride past the previous end
+        if ep < num - 1 - interval:
+            ep = ep + interval
+        else:
+            ep = (lp + rp + 1) // 2
+        ep = max(ep, sp)
+        while True:
+            fit = ev.evaluate(sp, ep, mode="feasible")
+            if fit.ok:
+                if ep == rp:
+                    break  # inner loop done: widest feasible end found
+                lp = ep
+                if rflag == 1 and ep <= num - 1 - interval:
+                    ep = ep + interval
+                else:
+                    ep = (lp + rp + 1) // 2
+            else:
+                if rp == lp + 1:
+                    rp -= 1
+                else:
+                    rp = ep - 1
+                rflag = 0
+                if rp < lp:
+                    raise RuntimeError(
+                        f"MAE_t={ev.mae_t} unachievable at single grid point "
+                        f"{sp} — no segmentation exists for this FWL config")
+                ep = (lp + rp + 1) // 2
+        segments.append(_finalize(ev, sp, ep, final_mode))
+        if max_segments is not None and len(segments) > max_segments:
+            raise RuntimeError(f"exceeded max_segments={max_segments}")
+        j = ep + 1
+    return segments
+
+
+def bisection_segment(ev: SegmentEvaluator,
+                      final_mode: str = "best") -> List[Segment]:
+    """PLAC-style bisection [26]: full-interval window per segment."""
+    num = ev.num
+    segments: List[Segment] = []
+    j = 0
+    while j < num:
+        sp = j
+        # whole remaining interval first
+        if ev.evaluate(sp, num - 1, mode="feasible").ok:
+            segments.append(_finalize(ev, sp, num - 1, final_mode))
+            break
+        lo, hi = sp, num - 1          # lo: ok (single point assumed), hi: bad
+        if not ev.evaluate(sp, sp, mode="feasible").ok:
+            raise RuntimeError(
+                f"MAE_t={ev.mae_t} unachievable at single grid point {sp}")
+        while hi - lo > 1:
+            mid = (lo + hi) // 2
+            if ev.evaluate(sp, mid, mode="feasible").ok:
+                lo = mid
+            else:
+                hi = mid
+        segments.append(_finalize(ev, sp, lo, final_mode))
+        j = lo + 1
+    return segments
+
+
+def sequential_segment(ev: SegmentEvaluator,
+                       final_mode: str = "best") -> List[Segment]:
+    """Sun et al. [25]: walk the end point back from the interval end."""
+    num = ev.num
+    segments: List[Segment] = []
+    j = 0
+    while j < num:
+        sp = j
+        ep = num - 1
+        while ep > sp and not ev.evaluate(sp, ep, mode="feasible").ok:
+            ep -= 1
+        if ep == sp and not ev.evaluate(sp, ep, mode="feasible").ok:
+            raise RuntimeError(
+                f"MAE_t={ev.mae_t} unachievable at single grid point {sp}")
+        segments.append(_finalize(ev, sp, ep, final_mode))
+        j = ep + 1
+    return segments
+
+
+def estimate_tseg(ev_factory: Callable[[Quantizer], SegmentEvaluator],
+                  reference_quantizer: Quantizer) -> Tuple[int, int]:
+    """Paper step 1: segment count with d=0 (reference quantizer) bounds
+    the target; tSEG = 2^round(log2(SEG_ref)) clamped to >= 1.
+
+    Returns (tseg, seg_ref).
+    """
+    ev = ev_factory(reference_quantizer)
+    seg_ref = len(bisection_segment(ev, final_mode="best"))
+    tseg = 1 << max(0, int(round(math.log2(max(1, seg_ref)))))
+    return tseg, seg_ref

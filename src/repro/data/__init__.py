@@ -1,0 +1,6 @@
+"""repro.data — deterministic synthetic stream + memmap token dataset."""
+
+from .memmap import TokenFileDataset, write_token_file
+from .synthetic import SyntheticLM
+
+__all__ = ["TokenFileDataset", "write_token_file", "SyntheticLM"]

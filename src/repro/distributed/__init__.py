@@ -1,0 +1,12 @@
+"""repro.distributed — sharding rules, pipeline parallelism, gradient
+compression."""
+
+from .compression import ef_allreduce, ef_allreduce_tree, q8_decode, q8_encode
+from .pipeline import bubble_fraction, pipeline_apply
+from .sharding import (batch_shardings, cache_shardings, dp_axes_of,
+                       make_ctx, make_rules, param_shardings)
+
+__all__ = ["ef_allreduce", "ef_allreduce_tree", "q8_decode", "q8_encode",
+           "bubble_fraction", "pipeline_apply",
+           "batch_shardings", "cache_shardings", "dp_axes_of", "make_ctx",
+           "make_rules", "param_shardings"]

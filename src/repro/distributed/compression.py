@@ -1,0 +1,65 @@
+"""int8 error-feedback gradient all-reduce (pure-DP sync path).
+
+For replicated-parameter data parallelism (the pod axis when it is not
+consumed by FSDP/PP), the gradient all-reduce volume dominates the
+inter-pod (DCN-ish) links.  We compress each shard to int8 with a
+per-tensor-row scale before the psum and carry the quantization residual
+in an error-feedback buffer, which provably preserves SGD convergence
+(1-bit Adam / EF-SGD lineage): what is lost this step is re-injected next
+step, so the *accumulated* gradient is exact.
+
+Usage (inside shard_map over the dp axis, or on explicitly replicated
+grads):  ``g_sync, new_err = ef_allreduce(g_local + err, axis, n)``.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["q8_encode", "q8_decode", "ef_allreduce", "ef_allreduce_tree"]
+
+
+def q8_encode(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    xf = x.astype(jnp.float32)
+    if x.ndim == 0:
+        scale = jnp.maximum(jnp.abs(xf), 1e-30) / 127.0
+    else:
+        scale = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
+        scale = jnp.maximum(scale, 1e-30) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def q8_decode(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def ef_allreduce(g_with_err: jax.Array, axis_name,
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Compress -> all_gather(int8 + scales) -> decode-sum locally.
+
+    The wire payload is the int8 tensor + one fp32 scale per row (a 3.9x
+    byte reduction vs fp32 all-reduce); the sum happens after decode so
+    precision of the *reduction* is fp32.  err = local value - its own
+    decode, re-injected by the caller next step (error feedback).
+    """
+    q, s = q8_encode(g_with_err)
+    err = g_with_err.astype(jnp.float32) - q8_decode(q, s)
+
+    qg = jax.lax.all_gather(q, axis_name)          # (n, ...) int8 on wire
+    sg = jax.lax.all_gather(s, axis_name)
+    mean = jnp.mean(qg.astype(jnp.float32) * sg, axis=0)
+    return mean, err
+
+
+def ef_allreduce_tree(grads, errs, axis_name):
+    """Tree version: returns (synced_grads, new_errs)."""
+    flat_g, tdef = jax.tree_util.tree_flatten(grads)
+    flat_e = tdef.flatten_up_to(errs)
+    out = [ef_allreduce(g.astype(jnp.float32) + e, axis_name)
+           for g, e in zip(flat_g, flat_e)]
+    return (tdef.unflatten([o[0] for o in out]),
+            tdef.unflatten([o[1] for o in out]))

@@ -1,0 +1,154 @@
+"""Logical-axis -> mesh-axis rule tables and sharding builders.
+
+Profiles:
+  train  — FSDP over the dp axes (embed dims of every weight) + Megatron TP
+           over "model" (heads / mlp / vocab / experts).  MoE expert
+           weights FSDP on their embed dim (gathered per layer inside the
+           shard_map block).
+  serve  — weights stay maximally sharded; MoE expert weights shard their
+           *mlp* dim over dp instead (stationary weights, token_gather
+           mode), KV caches shard batch over dp and heads over model.
+
+The rules map each logical axis name used by model param specs to a mesh
+axis (or tuple, or None).  ``param_shardings`` turns a spec tree into
+NamedShardings; ``cache_shardings`` pattern-matches KV/state cache leaves.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as PS
+
+from repro.models import ShardCtx, param_axes
+
+__all__ = ["make_rules", "param_shardings", "batch_shardings",
+           "cache_shardings", "make_ctx", "dp_axes_of"]
+
+
+def dp_axes_of(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def make_rules(profile: str, mesh: Mesh,
+               kv_heads_sharded: bool = True) -> Dict[str, object]:
+    dp = dp_axes_of(mesh)
+    fsdp = dp if len(dp) == 1 else dp          # ("data",) or ("pod","data")
+    common = {
+        "layers": None, "head": None, "conv": None, "state": None,
+        "dt": None, "vocab": "model",
+        "q_heads": "model",
+        # kv_shard="seq": unpadded kv heads replicate over model
+        "kv_heads": "model" if kv_heads_sharded else None,
+        "mlp": "model",
+        "inner": "model", "inner2": "model",
+        "expert": "model",
+    }
+    if profile == "train":
+        return {**common, "embed": fsdp,
+                "expert_embed": fsdp, "expert_mlp": None}
+    if profile == "serve":
+        return {**common, "embed": fsdp,
+                "expert_embed": None, "expert_mlp": fsdp}
+    if profile == "serve_wstation":
+        # weight-stationary decode: no FSDP on dense weights (a TP-sharded
+        # replica per data row — decode would otherwise all-gather every
+        # layer's weights per token); experts stay fully sharded via
+        # (expert->model, expert_mlp->dp) inside the token_gather block
+        return {**common, "embed": None,
+                "expert_embed": None, "expert_mlp": fsdp}
+    raise ValueError(profile)
+
+
+def _spec_for(axes: Tuple[Optional[str], ...], rules) -> PS:
+    used = set()
+    parts = []
+    for a in axes:
+        r = rules.get(a) if a else None
+        # a mesh axis may appear only once per spec
+        key = tuple(r) if isinstance(r, (tuple, list)) else (r,)
+        if r is None or any(k in used for k in key):
+            parts.append(None)
+        else:
+            used.update(key)
+            parts.append(tuple(r) if isinstance(r, (tuple, list)) else r)
+    return PS(*parts)
+
+
+def param_shardings(specs, mesh: Mesh, rules) -> dict:
+    axes = param_axes(specs)
+    return jax.tree_util.tree_map(
+        lambda a: NamedSharding(mesh, _spec_for(a, rules)), axes,
+        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def batch_shardings(mesh: Mesh, batch_abstract, batch_sharded: bool = True
+                    ) -> dict:
+    """Inputs: shard dim0 (batch) over the dp axes."""
+    dp = dp_axes_of(mesh)
+    spec_b = PS(dp) if (batch_sharded and dp) else PS()
+
+    def leaf(x):
+        nd = len(x.shape)
+        if nd == 0:
+            return NamedSharding(mesh, PS())
+        return NamedSharding(mesh, PS(*(spec_b + (None,) * (nd - 1))))
+
+    return jax.tree_util.tree_map(leaf, batch_abstract)
+
+
+def cache_shardings(mesh: Mesh, cache_abstract, batch_sharded: bool = True,
+                    kv_shard: str = "heads") -> dict:
+    """Decode-cache tree: leaves have a leading (layers, batch, ...) pair.
+
+    Pattern rules (leaf name -> spec after the (L, B) prefix):
+      k/v   (L,B,S,H,Dh)   heads -> model    (kv_shard="heads"; kv padded)
+                           or S -> model     (kv_shard="seq": flash-decode
+                           style — no kv-head padding, partial softmax
+                           merged by GSPMD's cross-shard reductions)
+      pos   (L,B,S)
+      xk/xv (L,B,S,H,Dh)   heads -> model
+      h     (L,B,di,N)     di -> model          (ssm state)
+      conv  (L,B,K,di)     di -> model
+      s     (L,B,H,Dk,Dv)  heads -> model       (rwkv state)
+      tm_last/cm_last (L,B,1,D)
+    """
+    dp = dp_axes_of(mesh)
+    b = dp if (batch_sharded and dp) else None
+
+    def leaf(path, x):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        nd = len(x.shape)
+        if name in ("k", "v", "xk", "xv"):
+            if kv_shard == "seq":
+                spec = PS(None, b, "model", None, None)
+            else:
+                spec = PS(None, b, None, "model", None)
+        elif name == "pos":
+            spec = PS(None, b, "model") if kv_shard == "seq" \
+                else PS(None, b, None)
+        elif name == "h":
+            spec = PS(None, b, "model", None)
+        elif name == "conv":
+            spec = PS(None, b, None, "model")
+        elif name == "s":
+            spec = PS(None, b, "model", None, None)
+        elif name in ("tm_last", "cm_last"):
+            spec = PS(None, b, None, None)
+        else:
+            spec = PS(*([None] * nd))
+        assert len(spec) == nd, (name, x.shape, spec)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(leaf, cache_abstract)
+
+
+def make_ctx(mesh: Optional[Mesh], batch_sharded: bool = True,
+             seq_shard: bool = False) -> ShardCtx:
+    if mesh is None:
+        return ShardCtx()
+    return ShardCtx(mesh=mesh, dp_axes=dp_axes_of(mesh), tp_axis="model",
+                    batch_sharded=batch_sharded, seq_shard=seq_shard)

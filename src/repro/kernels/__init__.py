@@ -1,0 +1,14 @@
+"""repro.kernels — Pallas TPU kernels for the PPA activation datapath
+(the paper's computation unit), plus the jit'd model-facing ops and the
+pure-jnp oracle.  All three paths are bit-identical (tests assert exact
+integer equality)."""
+
+from .ops import (TableConsts, make_ppa_fn, pack_table, ppa_act, ppa_apply,
+                  ppa_softmax)
+from .ppa import ppa_eval_2d
+from .ref import ppa_eval_ref
+from .softmax_ppa import softmax_ppa_2d
+
+__all__ = ["TableConsts", "make_ppa_fn", "pack_table", "ppa_act",
+           "ppa_apply", "ppa_softmax", "ppa_eval_2d", "ppa_eval_ref",
+           "softmax_ppa_2d"]

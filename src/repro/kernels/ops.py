@@ -1,0 +1,270 @@
+"""Model-facing jit'd PPA activation ops.
+
+This is the bridge between the compiled :class:`~repro.core.schemes.PPATable`
+artifact (the paper's deployable result) and the JAX model zoo: float tensors
+in, float tensors out, with the fixed-point datapath bit-exact in the middle.
+
+Pieces:
+
+* ``TableConsts``    — the table packed as jnp arrays (device constants).
+* ``ppa_apply``      — quantize -> range-reduce -> datapath -> dequantize,
+  with symmetry handling (odd / sigmoid) and saturation outside the fitted
+  interval, exactly as a hardware NAF unit would be deployed in front of an
+  accelerator's vector lanes.
+* ``ppa_act``        — custom_vjp wrapper: the forward pass is the PPA
+  datapath, the backward pass is the *exact* derivative of the target NAF
+  (straight-through estimator — standard QAT practice, and the only sound
+  choice since the piecewise datapath has zero/undefined derivatives at
+  segment boundaries).
+* ``ppa_softmax``    — softmax whose exp is computed via the ``exp2_frac``
+  table: exp(x) = 2**(x*log2e) = 2**k * table(frac), with the power-of-two
+  scale applied exactly in float (ldexp is exact).
+* ``silu/gelu/...``  — convenience constructors used by the model configs.
+
+Execution path selection: ``backend="ref"`` (default, pure jnp —
+searchsorted+gather, runs everywhere) or ``backend="pallas"`` (the
+explicitly-tiled TPU kernel from kernels/ppa.py; interpret=True on CPU).
+Both are bit-identical; tests assert exact integer equality.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.datapath import FWLConfig
+from repro.core.functions import get_naf
+from repro.core.schemes import PPATable
+
+from .ppa import ppa_eval_2d
+from .ref import ppa_eval_ref
+
+__all__ = ["TableConsts", "pack_table", "ppa_apply", "ppa_act",
+           "ppa_softmax", "make_ppa_fn"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TableConsts:
+    """A PPATable packed for device execution (hashable static part +
+    jnp array constants that become XLA constants under jit)."""
+
+    naf: str
+    interval: Tuple[float, float]
+    w_in: int
+    w_out: int
+    w_a: Tuple[int, ...]
+    w_o: Tuple[int, ...]
+    w_b: int
+    round_mults: bool
+    symmetry: Optional[str]
+    sat_hi: Optional[float]
+    sat_identity: bool
+    num_segments: int
+    # array leaves (not part of __hash__/__eq__ via compare=False)
+    starts: jax.Array = dataclasses.field(compare=False)
+    coefs: jax.Array = dataclasses.field(compare=False)
+    # beyond-paper TPU deployment modes (bit-exact by construction):
+    #   idx_lut[x - lo]  -> segment index   (kills the searchsorted loop)
+    #   val_lut[x - lo]  -> datapath output (one gather; the PPA table is
+    #                       the *compiler* for the LUT, per DESIGN.md §3)
+    idx_lut: jax.Array = dataclasses.field(compare=False, default=None)
+    val_lut: jax.Array = dataclasses.field(compare=False, default=None)
+    lo: int = 0
+
+
+def pack_table(table: PPATable) -> TableConsts:
+    from repro.core.schemes import eval_table_int
+
+    spec = get_naf(table.naf)
+    coefs = np.concatenate([table.a_int, table.b_int[:, None]], axis=1)
+    # int32 datapath headroom: stage products must stay under 2**31
+    x_max = abs(int(table.interval[1] * (1 << table.cfg.w_in))) + 1
+    if int(np.abs(coefs).max(initial=1)) * x_max >= (1 << 31):
+        raise ValueError(
+            f"table {table.naf} overflows the int32 datapath "
+            f"(|coef|max={np.abs(coefs).max()}, x_max={x_max})")
+
+    # LUT deployment modes: the whole fixed-point input domain is small
+    # (<= span * 2^w_in entries), so both the segment index and the full
+    # datapath output can be tabulated bit-exactly at pack time.
+    lo = int(math.ceil(table.interval[0] * (1 << table.cfg.w_in) - 1e-12))
+    hi = int(math.ceil(table.interval[1] * (1 << table.cfg.w_in) - 1e-12))
+    grid = np.arange(lo, hi, dtype=np.int64)
+    idx = np.clip(np.searchsorted(table.starts_int, grid, side="right") - 1,
+                  0, table.num_segments - 1)
+    vals = eval_table_int(table, grid)
+
+    return TableConsts(
+        naf=table.naf, interval=tuple(table.interval),
+        w_in=table.cfg.w_in, w_out=table.cfg.w_out,
+        w_a=tuple(table.cfg.w_a), w_o=tuple(table.cfg.w_o),
+        w_b=table.cfg.w_b, round_mults=table.cfg.round_mults,
+        symmetry=spec.symmetry, sat_hi=spec.sat_hi,
+        sat_identity=spec.sat_identity,
+        num_segments=table.num_segments,
+        starts=jnp.asarray(table.starts_int, dtype=jnp.int32),
+        coefs=jnp.asarray(coefs, dtype=jnp.int32),
+        idx_lut=jnp.asarray(idx, dtype=jnp.int32),
+        val_lut=jnp.asarray(vals, dtype=jnp.int32),
+        lo=lo)
+
+
+def _eval_int(tc: TableConsts, x_int: jax.Array, backend: str) -> jax.Array:
+    kw = dict(w_in=tc.w_in, w_out=tc.w_out, w_a=tc.w_a, w_o=tc.w_o,
+              w_b=tc.w_b, round_mults=tc.round_mults)
+    if backend == "ref":
+        return ppa_eval_ref(x_int, tc.starts, tc.coefs, **kw)
+    if backend == "lut_value":
+        # one gather; the PPA compile is the LUT generator (bit-exact)
+        return jnp.take(tc.val_lut, x_int - tc.lo, axis=0)
+    if backend == "lut_index":
+        # keep the Horner datapath, replace the segment search by a gather
+        idx = jnp.take(tc.idx_lut, x_int - tc.lo, axis=0)
+        sel = tc.coefs[idx]
+        from .ref import horner_int
+        return horner_int(sel, x_int, **kw)
+    if backend in ("pallas", "pallas_interpret"):
+        shape = x_int.shape
+        flat = x_int.reshape(-1)
+        bm, bn = 8, 128
+        n = flat.shape[0]
+        pad = (-n) % (bm * bn)
+        flat = jnp.pad(flat, (0, pad))
+        x2 = flat.reshape(-1, bn)
+        # grow block_m up to 256 rows while it divides
+        rows = x2.shape[0]
+        while bm < 256 and rows % (bm * 2) == 0:
+            bm *= 2
+        out = ppa_eval_2d(x2, tc.starts, tc.coefs, block=(bm, bn),
+                          interpret=(backend == "pallas_interpret"), **kw)
+        return out.reshape(-1)[:n].reshape(shape)
+    raise ValueError(f"unknown backend {backend!r}")
+
+
+def ppa_apply(tc: TableConsts, x: jax.Array, *, backend: str = "ref"
+              ) -> jax.Array:
+    """Full deployment path: float in -> fixed-point PPA datapath -> float out.
+
+    Range reduction (hardware pre/post conditioning around the NAF unit):
+      symmetry "odd":     f(-x) = -f(x)       -> evaluate |x|, restore sign
+      symmetry "sigmoid": f(-x) = 1 - f(x)    -> evaluate |x|, flip output
+      symmetry "minus_x": f(-x) = f(x) - x    -> softplus/silu half-line
+      saturation:         x >= xe             -> sat_hi const, or x itself
+                          (sat_identity: softplus/silu ~ identity above xe)
+    """
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    xs, xe = tc.interval
+    neg = xf < 0 if tc.symmetry else None
+    if tc.symmetry:
+        xf = jnp.abs(xf)
+
+    # quantize to the input grid (round-half-away, matching to_fixed)
+    scale_in = float(1 << tc.w_in)
+    x_int = jnp.floor(jnp.abs(xf) * scale_in + 0.5).astype(jnp.int32)
+    x_int = jnp.where(xf < 0, -x_int, x_int)  # xf >= 0 under symmetry anyway
+
+    lo = int(math.ceil(xs * scale_in - 1e-12))
+    hi = int(math.ceil(xe * scale_in - 1e-12))
+    oob_hi = x_int >= hi
+    x_int_c = jnp.clip(x_int, lo, hi - 1)
+
+    y_int = _eval_int(tc, x_int_c, backend)
+    y = y_int.astype(jnp.float32) / float(1 << tc.w_out)
+
+    if tc.sat_identity:
+        y = jnp.where(oob_hi, xf, y)
+    elif tc.sat_hi is not None:
+        y = jnp.where(oob_hi, jnp.float32(tc.sat_hi), y)
+    if tc.symmetry == "odd":
+        y = jnp.where(neg, -y, y)
+    elif tc.symmetry == "sigmoid":
+        y = jnp.where(neg, 1.0 - y, y)
+    elif tc.symmetry == "minus_x":
+        y = jnp.where(neg, y - xf, y)
+    return y.astype(dtype)
+
+
+def _exact(naf: str, x: jax.Array) -> jax.Array:
+    """float32 exact evaluation of the NAF (for VJP + the `exact` impl)."""
+    if naf in ("sigmoid", "sigmoid_wide"):
+        return jax.nn.sigmoid(x)
+    if naf in ("tanh", "tanh_wide"):
+        return jnp.tanh(x)
+    if naf == "exp2_frac":
+        return jnp.exp2(x)
+    if naf == "exp_neg":
+        return jnp.exp(-x)
+    if naf == "gelu_inner":
+        return 0.5 * (1.0 + jax.lax.erf(x / np.float32(np.sqrt(2.0))))
+    if naf == "softplus":
+        return jax.nn.softplus(x)
+    if naf == "silu":
+        return jax.nn.silu(x)
+    if naf == "recip":
+        return 1.0 / x
+    if naf == "rsqrt":
+        return jax.lax.rsqrt(x)
+    if naf == "log2":
+        return jnp.log2(x)
+    raise KeyError(naf)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 2))
+def ppa_act(tc: TableConsts, x: jax.Array, backend: str = "ref") -> jax.Array:
+    """PPA forward, exact-derivative backward (straight-through)."""
+    return ppa_apply(tc, x, backend=backend)
+
+
+def _ppa_act_fwd(tc, x, backend):
+    return ppa_apply(tc, x, backend=backend), x
+
+
+def _ppa_act_bwd(tc, backend, x, g):
+    f = lambda v: _exact(tc.naf, v.astype(jnp.float32))
+    _, vjp = jax.vjp(f, x)
+    (dx,) = vjp(g.astype(jnp.float32))
+    return (dx.astype(x.dtype),)
+
+
+ppa_act.defvjp(_ppa_act_fwd, _ppa_act_bwd)
+
+
+def ppa_softmax(tc_exp2: TableConsts, x: jax.Array, *, axis: int = -1,
+                where: Optional[jax.Array] = None,
+                backend: str = "ref") -> jax.Array:
+    """Softmax with exp computed through the exp2_frac PPA table.
+
+    exp(x - m) = 2**((x-m)*log2e) = 2**k * T(f),  k = floor(s) in [-K, 0],
+    f = s - k in [0, 1).  The 2**k scale is an exact float ldexp; only the
+    fractional power goes through the fixed-point datapath, exactly the
+    decomposition a hardware softmax unit (MBS/TEA-S lineage) uses.
+    """
+    assert tc_exp2.naf == "exp2_frac", tc_exp2.naf
+    xf = x.astype(jnp.float32)
+    if where is not None:
+        xf = jnp.where(where, xf, -jnp.inf)
+    m = jnp.max(xf, axis=axis, keepdims=True)
+    m = jnp.where(jnp.isfinite(m), m, 0.0)  # all-masked rows
+    s = (xf - m) * np.float32(math.log2(math.e))
+    s = jnp.maximum(s, -24.0)               # 2^-24 underflows the table anyway
+    k = jnp.floor(s)
+    f = s - k                               # in [0, 1)
+    pow2f = ppa_act(tc_exp2, f, backend)    # table(f) in [1, 2)
+    e = pow2f * jnp.exp2(k)                 # exact scale
+    if where is not None:
+        e = jnp.where(where, e, 0.0)
+    denom = jnp.sum(e, axis=axis, keepdims=True)
+    return (e / jnp.maximum(denom, 1e-30)).astype(x.dtype)
+
+
+def make_ppa_fn(table: PPATable, backend: str = "ref"):
+    """Close over a packed table -> elementwise activation callable."""
+    tc = pack_table(table)
+    return lambda x: ppa_act(tc, x, backend)

@@ -1,0 +1,132 @@
+"""Pallas TPU kernel for batched fixed-point PPA activation evaluation.
+
+Hardware mapping of the paper's datapath (DESIGN.md §3/§5):
+
+  * index generator (s-1 comparators)  -> a compare-select sweep over the
+    sorted segment-start vector held in VMEM.  Because starts are sorted
+    ascending, the running ``where(x >= starts[s], row_s, acc)`` sweep
+    leaves exactly the last matching row selected — the vectorised analogue
+    of the parallel comparator + priority encoder, with no per-element
+    dynamic addressing (which the TPU vector unit cannot do efficiently).
+  * coefficient ROM                    -> the (S, n+1) int32 table rides in
+    VMEM next to the block (< 2 KiB for every paper config).
+  * truncating multipliers / concat adders -> int32 multiply + arithmetic
+    right shift (two's-complement floor == the paper's truncation); the
+    concat adder is an exact aligned add (see core/datapath.py).
+
+Block layout: x is tiled (block_m, 128) int32 — the minor dimension matches
+the 128-lane VPU; block_m=256 keeps in+out VMEM traffic at 256 KiB/block,
+far below the ~16 MiB v5e VMEM budget, leaving room for double buffering.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = (256, 128)
+
+
+def _ppa_kernel(x_ref, starts_ref, coef_ref, out_ref, *, order: int,
+                shifts: Tuple[int, ...], up_g: Tuple[int, ...],
+                up_a: Tuple[int, ...], up_hb: int, up_b: int, down_out: int,
+                num_segments: int, round_mults: bool):
+    """One (block_m, 128) tile: select coefficients, run the Horner chain.
+
+    All shift amounts are compile-time constants baked from the FWLConfig:
+      shifts[i]   : truncation at multiplier i output
+      up_g[i]/up_a[i] : alignment shifts of the concat adder before mult i+1
+      up_hb/up_b  : alignment of the final intercept add
+      down_out    : final rescale to w_out
+    """
+    x = x_ref[...]
+
+    # --- segment select: comparator sweep over sorted starts ---------------
+    sel = [jnp.full(x.shape, coef_ref[0, c], dtype=jnp.int32)
+           for c in range(order + 1)]
+    for s in range(1, num_segments):
+        ge = x >= starts_ref[s]
+        for c in range(order + 1):
+            sel[c] = jnp.where(ge, coef_ref[s, c], sel[c])
+
+    def trunc(v, sh):
+        if sh > 0:
+            if round_mults:
+                v = v + (1 << (sh - 1))
+            return jax.lax.shift_right_arithmetic(v, sh)
+        if sh < 0:
+            return jax.lax.shift_left(v, -sh)
+        return v
+
+    # --- Horner chain -------------------------------------------------------
+    h = trunc(sel[0] * x, shifts[0])
+    for i in range(1, order):
+        g = trunc(h, -up_g[i - 1]) + trunc(sel[i], -up_a[i - 1])
+        h = trunc(g * x, shifts[i])
+    out = trunc(h, -up_hb) + trunc(sel[order], -up_b)
+    out_ref[...] = trunc(out, down_out)
+
+
+def ppa_eval_2d(
+    x_int: jax.Array,
+    starts: jax.Array,
+    coefs: jax.Array,
+    *,
+    w_in: int,
+    w_out: int,
+    w_a: Sequence[int],
+    w_o: Sequence[int],
+    w_b: int,
+    round_mults: bool = False,
+    block: Tuple[int, int] = DEFAULT_BLOCK,
+    interpret: bool = True,
+) -> jax.Array:
+    """Evaluate the PPA datapath on a 2D int32 array (pre-padded).
+
+    Args:
+      x_int: (M, N) int32, FWL w_in; M % block[0] == 0, N % block[1] == 0.
+      starts: (S,) int32 sorted segment starts (FWL w_in).
+      coefs: (S, n+1) int32 — columns a_1..a_n then b.
+      interpret: run the kernel body in interpret mode (CPU validation);
+        pass False on real TPU.
+    """
+    order = len(w_a)
+    # precompute every alignment as compile-time constants
+    shifts = [w_a[0] + w_in - w_o[0]]
+    up_g, up_a = [], []
+    cur = w_o[0]
+    for i in range(1, order):
+        wg = max(cur, w_a[i])
+        up_g.append(wg - cur)
+        up_a.append(wg - w_a[i])
+        shifts.append(wg + w_in - w_o[i])
+        cur = w_o[i]
+    w_sum = max(cur, w_b)
+    up_hb, up_b = w_sum - cur, w_sum - w_b
+    down_out = w_sum - w_out
+
+    m, n = x_int.shape
+    s = starts.shape[0]
+    grid = (m // block[0], n // block[1])
+    kernel = functools.partial(
+        _ppa_kernel, order=order, shifts=tuple(shifts), up_g=tuple(up_g),
+        up_a=tuple(up_a), up_hb=up_hb, up_b=up_b, down_out=down_out,
+        num_segments=s, round_mults=round_mults)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(block, lambda i, j: (i, j)),
+            pl.BlockSpec((s,), lambda i, j: (0,)),
+            pl.BlockSpec((s, order + 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec(block, lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=interpret,
+    )(x_int.astype(jnp.int32), starts.astype(jnp.int32),
+      coefs.astype(jnp.int32))

@@ -1,0 +1,7 @@
+"""repro.launch — mesh construction, multi-pod dry-run, train/serve
+drivers.  NOTE: import repro.launch.dryrun only in a fresh process — it
+pins XLA_FLAGS to 512 host devices at import time."""
+
+from .mesh import TPU_PERF_FLAGS, make_production_mesh, mesh_desc
+
+__all__ = ["TPU_PERF_FLAGS", "make_production_mesh", "mesh_desc"]

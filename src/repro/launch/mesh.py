@@ -1,0 +1,52 @@
+"""Production mesh construction.
+
+A function, not a module constant — importing this module never touches
+jax device state (the dry-run must set XLA_FLAGS before first jax init).
+
+Recorded XLA flags for real-TPU runs (collective/compute overlap — these
+change nothing on the CPU dry-run but are part of the deployment config):
+
+  --xla_tpu_enable_async_collective_fusion=true
+  --xla_tpu_enable_async_collective_fusion_fuse_all_gather=true
+  --xla_tpu_overlap_compute_collective_tc=true
+  --xla_enable_async_all_gather=true
+  --xla_enable_async_collective_permute=true
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+TPU_PERF_FLAGS = (
+    "--xla_tpu_enable_async_collective_fusion=true "
+    "--xla_tpu_enable_async_collective_fusion_fuse_all_gather=true "
+    "--xla_tpu_overlap_compute_collective_tc=true "
+    "--xla_enable_async_all_gather=true "
+    "--xla_enable_async_collective_permute=true"
+)
+
+__all__ = ["make_production_mesh", "mesh_desc", "TPU_PERF_FLAGS"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """(16,16) data×model single pod; (2,16,16) pod×data×model for 2 pods.
+
+    Uses the first prod(shape) available devices so a 512-device host
+    platform can build both meshes."""
+    import jax
+
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(devices)} — "
+            "set XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+            "before the first jax import (launch/dryrun.py does this)")
+    return jax.make_mesh(shape, axes, devices=devices[:n])
+
+
+def mesh_desc(mesh) -> str:
+    return "x".join(f"{n}:{s}" for n, s in
+                    zip(mesh.axis_names, mesh.devices.shape))

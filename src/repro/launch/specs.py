@@ -1,0 +1,90 @@
+"""Abstract input specs per (arch x shape) — ShapeDtypeStructs with
+shardings attached; nothing is ever allocated (the shannon/kernels
+dry-run pattern)."""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as PS
+
+from repro.configs import ShapeProfile
+from repro.distributed import dp_axes_of
+from repro.models import ModelCfg, init_cache
+
+__all__ = ["input_specs", "active_params", "tokens_of_shape"]
+
+
+def _sds(shape, dtype, mesh, spec) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(
+        shape, dtype, sharding=NamedSharding(mesh, spec))
+
+
+def tokens_of_shape(shape: ShapeProfile) -> int:
+    if shape.kind == "train":
+        return shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return shape.global_batch * shape.seq_len
+    return shape.global_batch          # decode: one token per sequence
+
+
+def input_specs(cfg: ModelCfg, shape: ShapeProfile, mesh,
+                batch_sharded: bool = True) -> Dict[str, object]:
+    """Model inputs for one cell.  For decode kinds also returns the
+    abstract cache (from eval_shape — zero allocation)."""
+    dp = dp_axes_of(mesh)
+    b = shape.global_batch
+    bspec = dp if (batch_sharded and dp) else None
+    cdt = jnp.dtype(cfg.compute_dtype)
+
+    def extras():
+        out = {}
+        if cfg.enc_layers:
+            out["enc_feats"] = _sds((b, cfg.enc_seq, cfg.d_model), cdt,
+                                    mesh, PS(bspec, None, None))
+        if cfg.vision_tokens:
+            out["vision_embeds"] = _sds(
+                (b, cfg.vision_tokens, cfg.d_model), cdt, mesh,
+                PS(bspec, None, None))
+        return out
+
+    if shape.kind == "train":
+        return {
+            "tokens": _sds((b, shape.seq_len), jnp.int32, mesh,
+                           PS(bspec, None)),
+            "labels": _sds((b, shape.seq_len), jnp.int32, mesh,
+                           PS(bspec, None)),
+            **extras(),
+        }
+    if shape.kind == "prefill":
+        return {
+            "tokens": _sds((b, shape.seq_len), jnp.int32, mesh,
+                           PS(bspec, None)),
+            **extras(),
+        }
+    if shape.kind == "decode":
+        cache_abs = jax.eval_shape(
+            lambda: init_cache(cfg, b, shape.seq_len, jnp.bfloat16))
+        return {
+            "tokens": _sds((b, 1), jnp.int32, mesh, PS(bspec, None)),
+            "pos": _sds((b,), jnp.int32, mesh, PS(bspec)),
+            "cache": cache_abs,
+        }
+    raise ValueError(shape.kind)
+
+
+def active_params(cfg: ModelCfg, abstract) -> float:
+    """Parameter count weighted by MoE activation (experts x top_k/E)."""
+    import numpy as np
+    total = 0.0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(abstract)[0]:
+        keys = [str(getattr(p, "key", p)) for p in path]
+        n = float(np.prod(leaf.shape))
+        if "moe" in keys and any(k in ("w_gate", "w_up", "w_down", )
+                                 for k in keys) and "shared" not in keys:
+            n *= cfg.moe_topk / max(1, cfg.moe_experts)
+        total += n
+    return total

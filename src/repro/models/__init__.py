@@ -1,0 +1,18 @@
+"""repro.models — the architecture zoo with FQA-PPA activations as a
+first-class implementation choice."""
+
+from .activations import ActBundle, make_acts
+from .common import (P, ShardCtx, abstract_params, count_params, init_params,
+                     pad_to, param_axes, shard_hint, tree_bytes)
+from .config import ModelCfg, StageCfg
+from .transformer import (decode_step, forward_hidden, init_cache, loss_fn,
+                          make_model_acts, param_specs, prefill)
+
+__all__ = [
+    "ActBundle", "make_acts",
+    "P", "ShardCtx", "abstract_params", "count_params", "init_params",
+    "pad_to", "param_axes", "shard_hint", "tree_bytes",
+    "ModelCfg", "StageCfg",
+    "decode_step", "forward_hidden", "init_cache", "loss_fn",
+    "make_model_acts", "param_specs", "prefill",
+]

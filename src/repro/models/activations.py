@@ -1,0 +1,123 @@
+"""Activation implementation selection: exact jnp vs FQA PPA tables.
+
+This is where the paper's artifact becomes a first-class framework feature.
+An :class:`ActBundle` holds the callables every model block needs — silu,
+gelu, sigmoid, tanh, softplus, exp-decay and softmax — each backed either
+by the exact float op or by a compiled :class:`PPATable` running the
+fixed-point FQA datapath (with straight-through gradients for training).
+
+``make_acts(impl=...)``:
+  "exact"  — jnp ops (the float baseline every PPA run is compared to)
+  "ppa"    — FQA tables at the given deployment precision (default: the
+             paper's 16-bit-output FQA-O2 configuration, wide-domain
+             variants for the model-range functions)
+  "ppa8"   — the 8-bit FQA-S4-O1 deployment point (aggressive, for
+             accuracy-degradation studies)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import FWLConfig, PPAScheme
+from repro.core.registry import get_table
+from repro.kernels.ops import TableConsts, pack_table, ppa_act, ppa_softmax
+
+__all__ = ["ActBundle", "make_acts"]
+
+Act = Callable[[jax.Array], jax.Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class ActBundle:
+    impl: str
+    sigmoid: Act
+    tanh: Act
+    gelu: Act          # full gelu(x) = x * Phi(x)
+    silu: Act          # full silu(x) = x * sigmoid(x)
+    softplus: Act
+    exp_decay: Act     # e^-x for x >= 0 (SSM/RWKV decays)
+    softmax: Callable  # (x, axis=-1, where=None)
+
+    def gate(self, kind: str) -> Act:
+        return {"silu": self.silu, "gelu": self.gelu,
+                "sigmoid": self.sigmoid, "tanh": self.tanh}[kind]
+
+
+def _exact_bundle() -> ActBundle:
+    def softmax(x, axis=-1, where=None):
+        if where is not None:
+            x = jnp.where(where, x, jnp.finfo(x.dtype).min)
+        return jax.nn.softmax(x, axis=axis)
+    return ActBundle(
+        impl="exact",
+        sigmoid=jax.nn.sigmoid, tanh=jnp.tanh, gelu=jax.nn.gelu,
+        silu=jax.nn.silu, softplus=jax.nn.softplus,
+        exp_decay=lambda x: jnp.exp(-x), softmax=softmax)
+
+
+# deployment FWL points (paper Table VI/VII conclusions):
+#   16-bit: FQA-O2  W_i=8 W_a=(8,16) W_o=(16,16) W_b=16
+#   8-bit:  FQA-S4-O1 (multiplierless, hamming<=4)
+_CFG16 = FWLConfig(w_in=8, w_out=16, w_a=(8, 16), w_o=(16, 16), w_b=16)
+_CFG8 = FWLConfig(w_in=8, w_out=8, w_a=(8,), w_o=(8,), w_b=8)
+_SCHEME16 = PPAScheme(order=2, quantizer="fqa")
+_SCHEME8 = PPAScheme(order=1, m_shifters=4, quantizer="fqa")
+
+
+@functools.lru_cache(maxsize=None)
+def _tc(naf: str, bits: int) -> TableConsts:
+    cfg, scheme = (_CFG16, _SCHEME16) if bits == 16 else (_CFG8, _SCHEME8)
+    # wide-domain tables keep the fractional in-grid at w_in bits; the
+    # integer span of the interval only widens the comparator range.
+    return pack_table(get_table(naf, cfg, scheme))
+
+
+def _ppa_bundle(bits: int, backend: str) -> ActBundle:
+    sig = _tc("sigmoid_wide", bits)
+    tnh = _tc("tanh_wide", bits)
+    phi = _tc("gelu_inner", bits)
+    sp = _tc("softplus", bits)
+    en = _tc("exp_neg", bits)
+    e2 = _tc("exp2_frac", bits)
+
+    def sigmoid(x):
+        return ppa_act(sig, x, backend)
+
+    def tanh(x):
+        return ppa_act(tnh, x, backend)
+
+    def gelu(x):
+        return x * ppa_act(phi, x, backend)
+
+    def silu(x):
+        return x * ppa_act(sig, x, backend)
+
+    def softplus(x):
+        return ppa_act(sp, x, backend)
+
+    def exp_decay(x):
+        return ppa_act(en, x, backend)
+
+    def softmax(x, axis=-1, where=None):
+        return ppa_softmax(e2, x, axis=axis, where=where, backend=backend)
+
+    return ActBundle(impl=f"ppa{bits}", sigmoid=sigmoid, tanh=tanh,
+                     gelu=gelu, silu=silu, softplus=softplus,
+                     exp_decay=exp_decay, softmax=softmax)
+
+
+@functools.lru_cache(maxsize=None)
+def make_acts(impl: str = "exact", backend: str = "ref") -> ActBundle:
+    if impl == "exact":
+        return _exact_bundle()
+    if impl in ("ppa", "ppa16"):
+        return _ppa_bundle(16, backend)
+    if impl == "ppa8":
+        return _ppa_bundle(8, backend)
+    raise ValueError(f"unknown activation impl {impl!r}")

@@ -1,0 +1,305 @@
+"""Grouped-query attention: train/prefill (dense or flash-chunked) + decode.
+
+Features driven by the assigned archs:
+  * GQA with independent q/kv head counts (heads pre-padded to the TP extent
+    by config resolution; see configs/base.py)
+  * optional qk-norm (qwen3), QKV bias (qwen2), sliding window (hymba)
+  * RoPE with configurable theta (mistral-nemo 128k ctx uses 1e6)
+  * softmax through the ActBundle — exact or FQA-PPA exp2 (the paper's
+    datapath in the attention hot loop)
+  * decode with a ring-buffer KV cache: slots are addressed ``pos % len``,
+    each slot remembers its absolute position, so sliding-window layers
+    keep an O(window) cache (what makes hymba's long_500k shape feasible)
+
+The flash path is the online-softmax algorithm as a lax.scan over KV chunks
+— O(T * chunk) score memory instead of O(T^2), required for prefill_32k.
+The PPA variant computes both the chunk exponentials and the running
+rescale factors through the exp2 table.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .activations import ActBundle
+from .common import P, ShardCtx, shard_hint
+from .layers import rmsnorm, rope
+
+__all__ = ["AttnCfg", "attn_params", "attention", "decode_attention",
+           "init_kv_cache"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnCfg:
+    d_model: int
+    n_q: int                    # query heads (padded)
+    n_kv: int                   # kv heads (padded)
+    head_dim: int
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    causal: bool = True         # False for encoder / cross attention
+    window: Optional[int] = None   # sliding window (None = global)
+    flash_chunk: int = 1024     # KV chunk for the flash path
+    softmax_scale: Optional[float] = None
+
+    @property
+    def scale(self) -> float:
+        return self.softmax_scale or 1.0 / math.sqrt(self.head_dim)
+
+
+def attn_params(cfg: AttnCfg, layers: Optional[int] = None,
+                cross: bool = False) -> dict:
+    """Parameter specs.  With ``layers`` set, a leading scan dim is added."""
+    def lp(shape, axes, **kw):
+        if layers is None:
+            return P(shape, axes, **kw)
+        return P((layers,) + shape, ("layers",) + axes, **kw)
+
+    d, hq, hk, dh = cfg.d_model, cfg.n_q, cfg.n_kv, cfg.head_dim
+    out = {
+        "wq": lp((d, hq, dh), ("embed", "q_heads", "head")),
+        "wk": lp((d, hk, dh), ("embed", "kv_heads", "head")),
+        "wv": lp((d, hk, dh), ("embed", "kv_heads", "head")),
+        "wo": lp((hq, dh, d), ("q_heads", "head", "embed")),
+    }
+    if cfg.qkv_bias:
+        out["bq"] = lp((hq, dh), ("q_heads", "head"), init="zeros")
+        out["bk"] = lp((hk, dh), ("kv_heads", "head"), init="zeros")
+        out["bv"] = lp((hk, dh), ("kv_heads", "head"), init="zeros")
+    if cfg.qk_norm:
+        out["q_norm"] = {"scale": lp((dh,), ("head",), init="ones")}
+        out["k_norm"] = {"scale": lp((dh,), ("head",), init="ones")}
+    return out
+
+
+def _project_qkv(params: dict, cfg: AttnCfg, xq: jax.Array, xkv: jax.Array,
+                 q_pos: Optional[jax.Array], kv_pos: Optional[jax.Array]):
+    q = jnp.einsum("btd,dhe->bthe", xq, params["wq"])
+    k = jnp.einsum("bsd,dhe->bshe", xkv, params["wk"])
+    v = jnp.einsum("bsd,dhe->bshe", xkv, params["wv"])
+    if cfg.qkv_bias:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    if cfg.qk_norm:
+        q = rmsnorm(q, params["q_norm"])
+        k = rmsnorm(k, params["k_norm"])
+    if q_pos is not None:                     # cross-attn: no rope at all
+        q = rope(q, q_pos, theta=cfg.rope_theta)
+    if kv_pos is not None:
+        k = rope(k, kv_pos, theta=cfg.rope_theta)
+    return q, k, v
+
+
+def _mask(q_pos, k_pos, cfg: AttnCfg, window):
+    """(..., T, S) bool validity from absolute positions."""
+    qp = q_pos[..., :, None]
+    kp = k_pos[..., None, :]
+    valid = kp >= 0
+    if cfg.causal:
+        valid &= kp <= qp
+    if window is not None:
+        valid &= kp > qp - window
+    return valid
+
+
+def _dense_attn(q, k, v, valid, scale, acts: ActBundle):
+    """q: (B,T,Hq,D), k/v: (B,S,Hk,D), valid: (B,T,S) bool."""
+    b, t, hq, dh = q.shape
+    hk = k.shape[2]
+    g = hq // hk
+    qg = q.reshape(b, t, hk, g, dh)
+    scores = jnp.einsum("bthgd,bshd->bhgts", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    w = acts.softmax(scores, axis=-1, where=valid[:, None, None])
+    out = jnp.einsum("bhgts,bshd->bthgd", w.astype(v.dtype), v)
+    return out.reshape(b, t, hq, dh)
+
+
+def _flash_attn(q, k, v, q_pos, k_pos, cfg: AttnCfg, window,
+                acts: ActBundle):
+    """Online-softmax over KV chunks (numerically the flash algorithm).
+
+    exp() goes through acts: for the PPA bundle that is the exp2_frac
+    table on both the chunk scores and the running-max rescale factors.
+    """
+    b, t, hq, dh = q.shape
+    s = k.shape[1]
+    hk = k.shape[2]
+    g = hq // hk
+    c = min(cfg.flash_chunk, s)
+    while s % c:
+        c -= 1
+    n_chunks = s // c
+    qg = q.reshape(b, t, hk, g, dh).astype(jnp.float32)
+    scale = cfg.scale
+
+    # exp through the bundle: softmax of [x, 0] trick would be wasteful; we
+    # need a raw exp.  Use exp_decay(-x) = e^x for x <= 0 (scores - max <= 0).
+    expfn = lambda x: acts.exp_decay(-x)
+
+    kc = k.reshape(b, n_chunks, c, hk, dh).swapaxes(0, 1)
+    vc = v.reshape(b, n_chunks, c, hk, dh).swapaxes(0, 1)
+    pc = k_pos.reshape(b, n_chunks, c).swapaxes(0, 1) \
+        if k_pos.ndim == 2 else k_pos.reshape(n_chunks, c)
+
+    def step(carry, inp):
+        m, l, acc = carry
+        kj, vj, pj = inp
+        sc = jnp.einsum("bthgd,bshd->bhgts", qg, kj.astype(jnp.float32)
+                        ) * scale
+        pv = pj if pj.ndim == 2 else pj[None]
+        valid = _mask(q_pos, pv, cfg, window)            # (b, t, c)
+        sc = jnp.where(valid[:, None, None], sc, -jnp.inf)
+        mj = jnp.max(sc, axis=-1)                        # (b,hk,g,t)
+        m_new = jnp.maximum(m, mj)
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = expfn(sc - m_safe[..., None])
+        p = jnp.where(valid[:, None, None], p, 0.0)
+        corr = expfn(m - m_new)
+        corr = jnp.where(jnp.isfinite(m), corr, 0.0)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhgts,bshd->bhgtd", p, vj.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, hk, g, t), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, hk, g, t), jnp.float32)
+    a0 = jnp.zeros((b, hk, g, t, dh), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (kc, vc, pc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, t, hq, dh)
+    return out.astype(q.dtype)
+
+
+def attention(
+    params: dict,
+    cfg: AttnCfg,
+    x: jax.Array,                      # (B, T, D) queries source
+    acts: ActBundle,
+    ctx: ShardCtx,
+    *,
+    x_kv: Optional[jax.Array] = None,  # cross attention source
+    positions: Optional[jax.Array] = None,
+    kv_positions: Optional[jax.Array] = None,
+    window: Optional[jax.Array] = None,  # overrides cfg.window (traced ok)
+    impl: str = "dense",
+    return_kv: bool = False,
+):
+    """Full-sequence attention (training / prefill).
+
+    With ``return_kv`` also returns the (post-rope) K and V — prefill packs
+    them straight into the decode cache with no recomputation.
+    """
+    b, t, _ = x.shape
+    xkv = x if x_kv is None else x_kv
+    s = xkv.shape[1]
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32), (b, t))
+    if kv_positions is None:
+        kv_positions = (positions if x_kv is None else
+                        jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32),
+                                         (b, s)))
+    # cross attention is position-free (whisper-style learned enc positions)
+    rope_q = positions if x_kv is None else None
+    rope_kv = kv_positions if x_kv is None else None
+    q, k, v = _project_qkv(params, cfg, x, xkv, rope_q, rope_kv)
+    q = shard_hint(q, ctx, ctx.batch_spec, None, ctx.tp_axis, None)
+    k = shard_hint(k, ctx, ctx.batch_spec, None, ctx.tp_axis, None)
+    win = window if window is not None else cfg.window
+
+    if impl == "flash":
+        out = _flash_attn(q, k, v, positions, kv_positions, cfg, win, acts)
+    else:
+        valid = _mask(positions, kv_positions, cfg, win)
+        out = _dense_attn(q, k, v, valid, cfg.scale, acts)
+    out = shard_hint(out, ctx, ctx.batch_spec, None, ctx.tp_axis, None)
+    y = jnp.einsum("bthd,hde->bte", out, params["wo"])
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+# ----------------------------------------------------------------- decode
+def init_kv_cache(batch: int, cache_len: int, cfg: AttnCfg, dtype=jnp.bfloat16
+                  ) -> dict:
+    return {
+        "k": jnp.zeros((batch, cache_len, cfg.n_kv, cfg.head_dim), dtype),
+        "v": jnp.zeros((batch, cache_len, cfg.n_kv, cfg.head_dim), dtype),
+        "pos": jnp.full((batch, cache_len), -1, jnp.int32),
+    }
+
+
+def decode_attention(
+    params: dict,
+    cfg: AttnCfg,
+    x: jax.Array,                # (B, 1, D) current-token hidden
+    cache: dict,
+    pos: jax.Array,              # (B,) absolute position of the new token
+    acts: ActBundle,
+    ctx: ShardCtx,
+    *,
+    window: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, dict]:
+    """One decode step: write the new KV into its ring slot, attend."""
+    b = x.shape[0]
+    cache_len = cache["k"].shape[1]
+    q, k_new, v_new = _project_qkv(params, cfg, x, x, pos[:, None],
+                                   pos[:, None])
+
+    slot = (pos % cache_len).astype(jnp.int32)           # (B,)
+    bidx = jnp.arange(b)
+    k = cache["k"].at[bidx, slot].set(k_new[:, 0].astype(cache["k"].dtype))
+    v = cache["v"].at[bidx, slot].set(v_new[:, 0].astype(cache["v"].dtype))
+    kpos = cache["pos"].at[bidx, slot].set(pos)
+
+    win = window if window is not None else cfg.window
+    valid = _mask(pos[:, None], kpos, cfg, win)          # (B, 1, S)
+    out = _dense_attn(q, k, v, valid, cfg.scale, acts)   # (B, 1, Hq, Dh)
+    y = jnp.einsum("bthd,hde->bte", out, params["wo"])
+    return y, {"k": k, "v": v, "pos": kpos}
+
+
+def cross_attention_cached(
+    params: dict,
+    cfg: AttnCfg,
+    x: jax.Array,                # (B, T, D) decoder hidden
+    k: jax.Array,                # (B, S_enc, Hk, Dh) precomputed at prefill
+    v: jax.Array,
+    acts: ActBundle,
+    *,
+    enc_valid: Optional[jax.Array] = None,   # (B, S_enc) bool
+) -> jax.Array:
+    """Decoder cross-attention against a static encoder KV cache."""
+    b, t, _ = x.shape
+    s = k.shape[1]
+    q = jnp.einsum("btd,dhe->bthe", x, params["wq"])
+    if cfg.qkv_bias:
+        q = q + params["bq"]
+    if cfg.qk_norm:
+        q = rmsnorm(q, params["q_norm"])
+    if enc_valid is None:
+        valid = jnp.ones((b, t, s), dtype=bool)
+    else:
+        valid = jnp.broadcast_to(enc_valid[:, None, :], (b, t, s))
+    out = _dense_attn(q, k, v, valid, cfg.scale, acts)
+    return jnp.einsum("bthd,hde->bte", out, params["wo"])
+
+
+def cross_kv(params: dict, cfg: AttnCfg, enc: jax.Array) -> Tuple[jax.Array,
+                                                                  jax.Array]:
+    """Precompute cross-attention K/V from encoder output (once per request)."""
+    k = jnp.einsum("bsd,dhe->bshe", enc, params["wk"])
+    v = jnp.einsum("bsd,dhe->bshe", enc, params["wv"])
+    if cfg.qkv_bias:
+        k = k + params["bk"]
+        v = v + params["bv"]
+    if cfg.qk_norm:
+        k = rmsnorm(k, params["k_norm"])
+    return k, v

@@ -1,0 +1,146 @@
+"""Parameter-spec system shared by every model in the zoo.
+
+Models declare their parameters as nested dicts of :class:`P` specs —
+shape + logical axis names + initializer.  From one spec tree we derive:
+
+* ``init_params``     — materialized arrays (smoke tests, real training)
+* ``abstract_params`` — ShapeDtypeStructs (the multi-pod dry-run: no
+  allocation, 1T-param models compile fine on the CPU host)
+* ``param_axes``      — the logical-axes tree consumed by
+  ``distributed.sharding`` to build NamedShardings per mesh profile.
+
+Logical axis vocabulary (mapping to mesh axes lives in distributed/):
+  "layers"   scan dimension, never sharded
+  "embed"    d_model            -> fsdp ("data") for params
+  "q_heads"  query heads        -> "model"
+  "kv_heads" key/value heads    -> "model"
+  "head"     head_dim
+  "mlp"      ffn hidden         -> "model"
+  "vocab"    vocabulary         -> "model"
+  "expert"   MoE experts        -> "model" (EP)
+  "conv", "state", "dt"         SSM internals (unsharded)
+  None       unsharded dimension
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["P", "init_params", "abstract_params", "param_axes",
+           "tree_bytes", "count_params", "pad_to", "ShardCtx", "shard_hint"]
+
+
+@dataclasses.dataclass(frozen=True)
+class P:
+    """One parameter spec."""
+
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"        # normal | zeros | ones | scaled
+    scale: Optional[float] = None   # stddev override for normal init
+    dtype: Any = None           # override the tree-level param dtype
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"shape {self.shape} vs axes {self.axes}")
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, P)
+
+
+def _map_specs(fn: Callable[[P], Any], tree):
+    return jax.tree_util.tree_map(fn, tree, is_leaf=_is_spec)
+
+
+def init_params(specs, rng: jax.Array, dtype=jnp.float32):
+    """Materialize a spec tree into real arrays (deterministic per-leaf keys)."""
+    leaves, treedef = jax.tree_util.tree_flatten(specs, is_leaf=_is_spec)
+    keys = jax.random.split(rng, max(1, len(leaves)))
+
+    def mk(spec: P, key):
+        dt = spec.dtype or dtype
+        if spec.init == "zeros":
+            return jnp.zeros(spec.shape, dt)
+        if spec.init == "ones":
+            return jnp.ones(spec.shape, dt)
+        # fan-in scaled normal: last axis is the contraction for our matmuls
+        if spec.scale is not None:
+            std = spec.scale
+        else:
+            fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+            std = 1.0 / math.sqrt(max(1, fan_in))
+        return (jax.random.normal(key, spec.shape, jnp.float32) * std
+                ).astype(dt)
+
+    return jax.tree_util.tree_unflatten(
+        treedef, [mk(s, k) for s, k in zip(leaves, keys)])
+
+
+def abstract_params(specs, dtype=jnp.float32):
+    """ShapeDtypeStruct tree — used by the dry-run (never allocates)."""
+    return _map_specs(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype or dtype), specs)
+
+
+def param_axes(specs):
+    """Logical-axes tree (same structure as the param tree)."""
+    return _map_specs(lambda s: s.axes, specs)
+
+
+def tree_bytes(tree) -> int:
+    return sum(np.prod(x.shape) * jnp.dtype(x.dtype).itemsize
+               for x in jax.tree_util.tree_leaves(tree))
+
+
+def count_params(tree) -> int:
+    return int(sum(int(np.prod(x.shape))
+                   for x in jax.tree_util.tree_leaves(tree)))
+
+
+def pad_to(n: int, multiple: int) -> int:
+    """Round n up to a multiple (sharding divisibility padding)."""
+    return ((n + multiple - 1) // multiple) * multiple
+
+
+# ---------------------------------------------------------------------------
+# Sharding context threaded through model apply functions.
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ShardCtx:
+    """Mesh + axis names for layers that need explicit collectives
+    (shard_map MoE) or sharding constraints.  ``mesh=None`` (default) means
+    single-process execution: constraints become no-ops and the MoE block
+    uses its local (collective-free) path — bit-identical math."""
+
+    mesh: Optional[jax.sharding.Mesh] = None
+    dp_axes: Tuple[str, ...] = ("data",)      # batch axes (may include pod)
+    tp_axis: Optional[str] = "model"
+    batch_sharded: bool = True                # False for long_500k (B=1)
+    seq_shard: bool = False                   # Megatron-SP residual stream
+
+    def psched(self, *axes):
+        """PartitionSpec helper: None mesh -> None (no constraint)."""
+        if self.mesh is None:
+            return None
+        return jax.sharding.PartitionSpec(*axes)
+
+    @property
+    def batch_spec(self):
+        return tuple(self.dp_axes) if (self.batch_sharded and self.mesh)\
+            else None
+
+
+def shard_hint(x: jax.Array, ctx: ShardCtx, *axes) -> jax.Array:
+    """with_sharding_constraint that degrades to identity off-mesh."""
+    if ctx.mesh is None:
+        return x
+    spec = jax.sharding.PartitionSpec(*axes)
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(ctx.mesh, spec))

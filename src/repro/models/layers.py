@@ -1,0 +1,143 @@
+"""Shared model building blocks: norms, rotary embeddings, token embedding,
+LM head and the chunked cross-entropy loss."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import P, ShardCtx, shard_hint
+
+__all__ = ["rmsnorm_params", "rmsnorm", "layernorm_params", "layernorm",
+           "rope", "rope_freqs", "embed_spec", "embed_lookup",
+           "lm_head_logits", "cross_entropy_chunked"]
+
+
+# ------------------------------------------------------------------- norms
+def _norm_spec(dim: int, layers: Optional[int], with_bias: bool) -> dict:
+    if layers is None:
+        shape, axes = (dim,), ("embed",)
+    else:
+        shape, axes = (layers, dim), ("layers", "embed")
+    out = {"scale": P(shape, axes, init="ones")}
+    if with_bias:
+        out["bias"] = P(shape, axes, init="zeros")
+    return out
+
+
+def rmsnorm_params(dim: int, layers: Optional[int] = None) -> dict:
+    return _norm_spec(dim, layers, with_bias=False)
+
+
+def layernorm_params(dim: int, layers: Optional[int] = None) -> dict:
+    return _norm_spec(dim, layers, with_bias=True)
+
+
+def rmsnorm(x: jax.Array, params: dict, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+def layernorm(x: jax.Array, params: dict, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * params["scale"].astype(jnp.float32)
+    if "bias" in params:
+        y = y + params["bias"].astype(jnp.float32)
+    return y.astype(dt)
+
+
+# -------------------------------------------------------------------- rope
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float64)
+                            / head_dim))
+
+
+def rope(x: jax.Array, positions: jax.Array, *, theta: float = 10000.0
+         ) -> jax.Array:
+    """Rotary position embedding.  x: (..., T, H, D); positions: (..., T)."""
+    d = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(d, theta), dtype=jnp.float32)  # (D/2,)
+    ang = positions.astype(jnp.float32)[..., None] * freqs        # (...,T,D/2)
+    cos = jnp.cos(ang)[..., None, :]                              # (...,T,1,D/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------- embeddings
+def embed_spec(vocab: int, dim: int) -> P:
+    return P((vocab, dim), ("vocab", "embed"), scale=1.0)
+
+
+def embed_lookup(table: jax.Array, tokens: jax.Array, ctx: ShardCtx
+                 ) -> jax.Array:
+    """Embedding gather.  tokens: (B, T) int32 -> (B, T, E).
+
+    With the vocab dimension sharded over "model", GSPMD lowers this to an
+    all-gather of the (small) table shard + local gather — far cheaper than
+    a one-hot matmul at 150k+ vocabularies (whose B*T*V*E FLOPs would
+    exceed the entire transformer stack).
+    """
+    out = jnp.take(table, tokens, axis=0)
+    return shard_hint(out, ctx, ctx.batch_spec, None, None)
+
+
+def lm_head_logits(x: jax.Array, table: jax.Array) -> jax.Array:
+    """x: (..., E) @ (V, E)^T -> (..., V)."""
+    return jnp.einsum("...e,ve->...v", x, table)
+
+
+# ---------------------------------------------------------------- loss
+def cross_entropy_chunked(
+    x: jax.Array,              # (B, T, E) final hidden (pre-head)
+    head: jax.Array,           # (V, E) output embedding
+    labels: jax.Array,         # (B, T) int32
+    *,
+    mask: Optional[jax.Array] = None,
+    num_chunks: int = 8,
+    z_loss: float = 0.0,
+) -> Tuple[jax.Array, jax.Array]:
+    """Cross entropy without materializing full (B, T, V) logits.
+
+    Scans over T-chunks; each chunk computes logits -> logsumexp -> nll and
+    is wrapped in jax.checkpoint so the backward pass recomputes the chunk
+    logits instead of storing them.  Peak logits memory drops by
+    ``num_chunks`` — required for the 151k–163k vocab archs.
+
+    Returns (mean_nll, denom).
+    """
+    b, t, e = x.shape
+    while t % num_chunks:
+        num_chunks -= 1
+    xc = x.reshape(b, num_chunks, t // num_chunks, e).swapaxes(0, 1)
+    lc = labels.reshape(b, num_chunks, t // num_chunks).swapaxes(0, 1)
+    if mask is None:
+        mask = jnp.ones((b, t), dtype=jnp.float32)
+    mc = mask.reshape(b, num_chunks, t // num_chunks).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def chunk_loss(carry, inp):
+        xs, ls, ms = inp
+        logits = lm_head_logits(xs.astype(jnp.float32),
+                                head.astype(jnp.float32))
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, ls[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * ms
+        extra = z_loss * jnp.sum((lse * ms) ** 2) if z_loss else 0.0
+        return carry + jnp.sum(nll) + extra, None
+
+    total, _ = jax.lax.scan(chunk_loss, jnp.float32(0.0), (xc, lc, mc))
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    return total / denom, denom

@@ -1,0 +1,64 @@
+"""Gated (SwiGLU-family) and plain MLP blocks."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .activations import ActBundle
+from .common import P, ShardCtx, shard_hint
+
+__all__ = ["gated_mlp_params", "gated_mlp", "mlp_params", "mlp"]
+
+
+def _lp(layers, shape, axes, **kw):
+    if layers is None:
+        return P(shape, axes, **kw)
+    return P((layers,) + shape, ("layers",) + axes, **kw)
+
+
+def gated_mlp_params(d_model: int, d_ff: int, layers: Optional[int] = None
+                     ) -> dict:
+    return {
+        "w_gate": _lp(layers, (d_model, d_ff), ("embed", "mlp")),
+        "w_up": _lp(layers, (d_model, d_ff), ("embed", "mlp")),
+        "w_down": _lp(layers, (d_ff, d_model), ("mlp", "embed")),
+    }
+
+
+def gated_mlp(params: dict, x: jax.Array, acts: ActBundle, ctx: ShardCtx,
+              gate: str = "silu") -> jax.Array:
+    """SwiGLU: down( act(x @ w_gate) * (x @ w_up) )."""
+    g = jnp.einsum("btd,df->btf", x, params["w_gate"])
+    u = jnp.einsum("btd,df->btf", x, params["w_up"])
+    h = acts.gate(gate)(g) * u
+    h = shard_hint(h, ctx, ctx.batch_spec, None, ctx.tp_axis)
+    return jnp.einsum("btf,fd->btd", h, params["w_down"])
+
+
+def mlp_params(d_model: int, d_ff: int, layers: Optional[int] = None,
+               bias: bool = False) -> dict:
+    out = {
+        "w_up": _lp(layers, (d_model, d_ff), ("embed", "mlp")),
+        "w_down": _lp(layers, (d_ff, d_model), ("mlp", "embed")),
+    }
+    if bias:
+        out["b_up"] = _lp(layers, (d_ff,), ("mlp",), init="zeros")
+        out["b_down"] = _lp(layers, (d_model,), ("embed",), init="zeros")
+    return out
+
+
+def mlp(params: dict, x: jax.Array, acts: ActBundle, ctx: ShardCtx,
+        gate: str = "gelu") -> jax.Array:
+    """Plain 2-layer MLP (whisper / ViT projector style)."""
+    h = jnp.einsum("btd,df->btf", x, params["w_up"])
+    if "b_up" in params:
+        h = h + params["b_up"]
+    h = acts.gate(gate)(h)
+    h = shard_hint(h, ctx, ctx.batch_spec, None, ctx.tp_axis)
+    y = jnp.einsum("btf,fd->btd", h, params["w_down"])
+    if "b_down" in params:
+        y = y + params["b_down"]
+    return y

@@ -1,0 +1,168 @@
+"""Selective SSM (Mamba-style) mixer — the state-space half of hymba.
+
+Recurrence (per channel c, state dim N):
+    delta_t = softplus(dt_proj(x'_t) + dt_bias)          [PPA softplus]
+    a_t     = exp(-delta_t * A_c)                        [PPA exp_decay]
+    h_t     = a_t * h_{t-1} + delta_t * B_t * x_t
+    y_t     = <C_t, h_t> + D_c * x_t
+
+Training/prefill runs a chunked scan: jax.lax.scan over T/chunk chunks,
+with a jax.lax.associative_scan inside each chunk — the (B, Tc, d, N)
+intra-chunk state tensor is the only O(T) activation and is rematerialized
+in the backward pass (jax.checkpoint per chunk).  Decode is the plain
+one-step recurrence on a carried (B, d, N) state.
+
+Both nonlinearities route through the ActBundle, i.e. the FQA fixed-point
+tables when impl="ppa" — SSM blocks are exactly the "non-standard NAF"
+consumers the paper motivates with KANs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .activations import ActBundle
+from .common import P, ShardCtx, shard_hint
+
+__all__ = ["SSMCfg", "ssm_params", "ssm_mixer", "ssm_decode_step",
+           "init_ssm_state"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMCfg:
+    d_model: int
+    d_inner: int
+    d_state: int = 16
+    d_conv: int = 4
+    dt_rank: int = 64
+    chunk: int = 256
+
+
+def ssm_params(cfg: SSMCfg, layers: Optional[int] = None) -> dict:
+    def lp(shape, axes, **kw):
+        if layers is None:
+            return P(shape, axes, **kw)
+        return P((layers,) + shape, ("layers",) + axes, **kw)
+
+    d, di, n, r = cfg.d_model, cfg.d_inner, cfg.d_state, cfg.dt_rank
+    return {
+        "w_in": lp((d, 2 * di), ("embed", "inner2")),     # x_part | z gate
+        "conv_w": lp((cfg.d_conv, di), (None, "inner"), scale=0.5),
+        "conv_b": lp((di,), ("inner",), init="zeros"),
+        "w_x": lp((di, r + 2 * n), ("inner", None)),      # dt_low | B | C
+        "w_dt": lp((r, di), (None, "inner")),
+        "dt_bias": lp((di,), ("inner",), init="zeros"),
+        "a_log": lp((di, n), ("inner", None), init="zeros"),
+        "d_skip": lp((di,), ("inner",), init="ones"),
+        "w_out": lp((di, d), ("inner", "embed")),
+    }
+
+
+def _conv1d(x: jax.Array, w: jax.Array, b: jax.Array,
+            state: Optional[jax.Array] = None) -> jax.Array:
+    """Depthwise causal conv over T.  x: (B, T, di), w: (K, di).
+
+    ``state``: (B, K-1, di) trailing context from the previous call
+    (decode / chunk boundary); zeros when None.
+    """
+    k = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(k))
+    return out + b
+
+
+def _ssm_inner(params, cfg: SSMCfg, xz: jax.Array, conv_state, h0,
+               acts: ActBundle):
+    """Shared body: xz = x @ w_in, returns (y, new_conv_state, h_final)."""
+    di = cfg.d_inner
+    xs, z = xz[..., :di], xz[..., di:]
+    t = xs.shape[1]
+    new_conv = jnp.concatenate([conv_state, xs], axis=1)[:, -(cfg.d_conv - 1):]
+    xc = _conv1d(xs, params["conv_w"], params["conv_b"], conv_state)
+    xc = acts.silu(xc)
+
+    proj = jnp.einsum("btd,dr->btr", xc, params["w_x"])
+    r = cfg.dt_rank
+    n = cfg.d_state
+    dt_low = proj[..., :r]
+    bmat = proj[..., r:r + n]                      # (B, T, N)
+    cmat = proj[..., r + n:]                       # (B, T, N)
+    delta = acts.softplus(
+        jnp.einsum("btr,rd->btd", dt_low, params["w_dt"])
+        + params["dt_bias"])                       # (B, T, di)
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))   # (di, N), A < 0
+    # decay in (0, 1]: exp(delta * a) = exp_decay(delta * |a|)
+    dn = delta.astype(jnp.float32)[..., None] * (-a)    # (B,T,di,N) >= 0
+    decay = acts.exp_decay(dn)
+    drive = (delta * xc).astype(jnp.float32)[..., None] \
+        * bmat.astype(jnp.float32)[..., None, :]        # (B,T,di,N)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    aa, hh = jax.lax.associative_scan(combine, (decay, drive), axis=1)
+    hh = hh + aa * h0[:, None]                     # prefix state
+    y = jnp.einsum("btdn,btn->btd", hh, cmat.astype(jnp.float32))
+    y = y.astype(xc.dtype) + params["d_skip"] * xc
+    y = y * acts.silu(z)
+    return y, new_conv, hh[:, -1]
+
+
+def ssm_mixer(params: dict, cfg: SSMCfg, x: jax.Array, acts: ActBundle,
+              ctx: ShardCtx, return_state: bool = False):
+    """Full-sequence mixer (training / prefill).
+
+    ``return_state`` also yields the final (conv, h) carry — prefill packs
+    it directly into the decode cache.
+    """
+    b, t, _ = x.shape
+    xz = jnp.einsum("btd,de->bte", x, params["w_in"])
+    xz = shard_hint(xz, ctx, ctx.batch_spec, None, ctx.tp_axis)
+
+    c = min(cfg.chunk, t)
+    while t % c:
+        c -= 1
+    nch = t // c
+    xzc = xz.reshape(b, nch, c, -1).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def step(carry, xz_c):
+        conv_s, h = carry
+        y, conv_s, h = _ssm_inner(params, cfg, xz_c, conv_s, h, acts)
+        return (conv_s, h), y
+
+    conv0 = jnp.zeros((b, cfg.d_conv - 1, cfg.d_inner), xz.dtype)
+    h0 = jnp.zeros((b, cfg.d_inner, cfg.d_state), jnp.float32)
+    (conv_f, h_f), ys = jax.lax.scan(step, (conv0, h0), xzc)
+    y = ys.swapaxes(0, 1).reshape(b, t, cfg.d_inner)
+    out = jnp.einsum("bte,ed->btd", y, params["w_out"])
+    if return_state:
+        return out, {"conv": conv_f, "h": h_f}
+    return out
+
+
+def init_ssm_state(batch: int, cfg: SSMCfg, dtype=jnp.bfloat16) -> dict:
+    return {
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, cfg.d_inner), dtype),
+        "h": jnp.zeros((batch, cfg.d_inner, cfg.d_state), jnp.float32),
+    }
+
+
+def ssm_decode_step(params: dict, cfg: SSMCfg, x: jax.Array, state: dict,
+                    acts: ActBundle, ctx: ShardCtx
+                    ) -> Tuple[jax.Array, dict]:
+    """x: (B, 1, D) -> (B, 1, D), state update."""
+    xz = jnp.einsum("btd,de->bte", x, params["w_in"])
+    y, conv_s, h = _ssm_inner(params, cfg, xz, state["conv"], state["h"],
+                              acts)
+    out = jnp.einsum("bte,ed->btd", y, params["w_out"])
+    return out, {"conv": conv_s.astype(state["conv"].dtype), "h": h}

@@ -1,0 +1,7 @@
+"""repro.roofline — 3-term roofline from compiled dry-run artifacts."""
+
+from .analysis import (HW_V5E, Roofline, analyze_compiled, collective_bytes,
+                       model_flops)
+
+__all__ = ["HW_V5E", "Roofline", "analyze_compiled", "collective_bytes",
+           "model_flops"]

@@ -1,0 +1,26 @@
+"""Append-only JSONL metrics logger (one line per step)."""
+
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+from typing import Optional
+
+__all__ = ["MetricsLogger"]
+
+
+class MetricsLogger:
+    def __init__(self, path: Optional[str] = None):
+        self.path = Path(path) if path else None
+        if self.path:
+            self.path.parent.mkdir(parents=True, exist_ok=True)
+
+    def log(self, step: int, **metrics):
+        rec = {"step": step, "t": time.time()}
+        rec.update({k: float(v) for k, v in metrics.items()})
+        line = json.dumps(rec)
+        if self.path:
+            with open(self.path, "a") as f:
+                f.write(line + "\n")
+        return rec

@@ -1,0 +1,5 @@
+"""repro.serve — slot-based continuous-batching engine."""
+
+from .engine import Request, ServeEngine
+
+__all__ = ["Request", "ServeEngine"]

@@ -1,0 +1,133 @@
+"""Serving engine: slot-based continuous batching over prefill/decode.
+
+A fixed decode batch of ``n_slots`` sequences shares one cache tree.
+Requests are admitted into free slots (prefilled individually, then their
+cache rows inserted with a batched dynamic update); every ``step()``
+decodes all active slots at once; finished sequences free their slot.
+Sampling: greedy or temperature.  The PPA activation tables run inside
+both prefill and decode when the model config selects ``act_impl="ppa"``
+— serving *is* the paper's deployment scenario.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import (ModelCfg, ShardCtx, decode_step, init_cache,
+                          make_model_acts, prefill)
+
+__all__ = ["Request", "ServeEngine"]
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                 # (T,) int32
+    max_new_tokens: int = 16
+    temperature: float = 0.0
+    extra: Optional[dict] = None       # enc_feats / vision_embeds
+    # filled by the engine:
+    output: Optional[List[int]] = None
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelCfg, params, *, n_slots: int = 4,
+                 cache_len: int = 256, ctx: Optional[ShardCtx] = None,
+                 rng_seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.acts = make_model_acts(cfg)
+        self.ctx = ctx or ShardCtx()
+        self.n_slots = n_slots
+        self.cache_len = cache_len
+        self.cache = init_cache(cfg, n_slots, cache_len)
+        self.pos = np.zeros((n_slots,), np.int32)
+        self.cur_tok = np.zeros((n_slots,), np.int32)
+        self.slot_req: List[Optional[Request]] = [None] * n_slots
+        self.remaining = np.zeros((n_slots,), np.int32)
+        self.rng = jax.random.PRNGKey(rng_seed)
+        self._decode = jax.jit(
+            lambda p, c, t, pos: decode_step(p, cfg, c, t, pos, self.acts,
+                                             self.ctx))
+        self.queue: List[Request] = []
+
+    # ----------------------------------------------------------- admission
+    def submit(self, req: Request) -> None:
+        req.output = []
+        self.queue.append(req)
+
+    def _free_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self.slot_req) if r is None]
+
+    def _admit(self) -> None:
+        for slot in self._free_slots():
+            if not self.queue:
+                break
+            req = self.queue.pop(0)
+            batch = {"tokens": jnp.asarray(req.prompt[None, :], jnp.int32)}
+            if req.extra:
+                batch.update({k: jnp.asarray(v[None]) for k, v in
+                              req.extra.items()})
+            logits, cache1 = prefill(self.params, self.cfg, batch,
+                                     self.cache_len, self.acts, self.ctx)
+            tok = self._sample(logits, req.temperature)[0]
+            self._insert_cache(slot, cache1)
+            t = len(req.prompt) + self.cfg.vision_tokens
+            self.pos[slot] = t
+            self.cur_tok[slot] = int(tok)
+            self.remaining[slot] = req.max_new_tokens - 1
+            req.output.append(int(tok))
+            self.slot_req[slot] = req
+
+    def _insert_cache(self, slot: int, cache1) -> None:
+        """Write the (batch=1) prefill cache into the slot's row.
+
+        Cache leaves have layout (L, B, ...) per stage."""
+        def ins(full, one):
+            return full.at[:, slot].set(one[:, 0].astype(full.dtype))
+        self.cache = jax.tree_util.tree_map(ins, self.cache, cache1)
+
+    # ------------------------------------------------------------ sampling
+    def _sample(self, logits: jax.Array, temperature: float) -> np.ndarray:
+        if temperature <= 0:
+            return np.asarray(jnp.argmax(logits, axis=-1))
+        self.rng, k = jax.random.split(self.rng)
+        return np.asarray(
+            jax.random.categorical(k, logits / temperature, axis=-1))
+
+    # ---------------------------------------------------------------- step
+    def step(self) -> int:
+        """Admit pending requests, decode one token for every active slot.
+
+        Returns the number of active sequences stepped."""
+        self._admit()
+        active = [i for i, r in enumerate(self.slot_req) if r is not None]
+        if not active:
+            return 0
+        toks = jnp.asarray(self.cur_tok[:, None], jnp.int32)
+        pos = jnp.asarray(self.pos, jnp.int32)
+        logits, self.cache = self._decode(self.params, self.cache, toks, pos)
+        nxt = np.zeros((self.n_slots,), np.int32)
+        for i in active:
+            req = self.slot_req[i]
+            tok = self._sample(logits[i:i + 1], req.temperature)[0]
+            nxt[i] = tok
+            req.output.append(int(tok))
+            self.pos[i] += 1
+            self.remaining[i] -= 1
+            if self.remaining[i] <= 0:
+                req.done = True
+                self.slot_req[i] = None
+        self.cur_tok = nxt
+        return len(active)
+
+    def run_until_drained(self, max_steps: int = 10_000) -> None:
+        for _ in range(max_steps):
+            if not self.step() and not self.queue:
+                return

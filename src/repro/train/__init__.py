@@ -1,0 +1,9 @@
+"""repro.train — optimizers, schedules, the jitted train step."""
+
+from .optimizer import OptCfg, clip_grads, global_norm, opt_init, opt_update
+from .schedule import ScheduleCfg, lr_at
+from .train_step import TrainCfg, make_train_step, train_init
+
+__all__ = ["OptCfg", "clip_grads", "global_norm", "opt_init", "opt_update",
+           "ScheduleCfg", "lr_at", "TrainCfg", "make_train_step",
+           "train_init"]

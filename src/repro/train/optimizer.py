@@ -1,0 +1,154 @@
+"""Optimizers, built for the memory envelopes the assigned archs need.
+
+  sgdm      — tests / toy runs.
+  adamw     — fp32 moments (default for <=30B-param configs).
+  adamw8    — int8-quantized moments with per-row fp32 scales + error
+              feedback folded into the quantization (state = 2 bytes/param
+              instead of 8) — the distributed-optimization trick that keeps
+              mid-size models inside HBM during training.
+  adafactor — factored second moment (row+col) + no first moment:
+              O(rows+cols) state.  The only envelope that fits the
+              kimi-k2 1T-param config on a 512-chip mesh (see DESIGN.md).
+
+All are pure pytree functions: ``init(params) -> state``;
+``update(cfg, grads, state, params, lr) -> (new_params, new_state)``.
+States inherit the parameter's sharding (moments shard like their param;
+factored moments drop the factored axis) so FSDP covers optimizer memory
+automatically.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["OptCfg", "opt_init", "opt_update", "global_norm", "clip_grads"]
+
+
+@dataclasses.dataclass(frozen=True)
+class OptCfg:
+    kind: str = "adamw"          # sgdm | adamw | adamw8 | adafactor
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    momentum: float = 0.9        # sgdm
+    factored_min: int = 128      # adafactor: factor axes >= this
+
+
+# --------------------------------------------------------------- helpers
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree_util.tree_leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def clip_grads(grads, max_norm: float):
+    n = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(n, 1e-9))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), n
+
+
+# ----------------------------------------------------- int8 moment codec
+def _q8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-row int8 quantization (row = leading axes)."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True) if x.ndim else \
+        jnp.abs(xf)
+    scale = jnp.maximum(amax, 1e-30) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dq8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+# ----------------------------------------------------------------- init
+def opt_init(cfg: OptCfg, params):
+    def per_leaf(p):
+        if cfg.kind == "sgdm":
+            return {"m": jnp.zeros_like(p, jnp.float32)}
+        if cfg.kind == "adamw":
+            return {"m": jnp.zeros_like(p, jnp.float32),
+                    "v": jnp.zeros_like(p, jnp.float32)}
+        if cfg.kind == "adamw8":
+            zq, zs = _q8(jnp.zeros_like(p, jnp.float32))
+            return {"m_q": zq, "m_s": zs, "v_q": zq, "v_s": zs}
+        if cfg.kind == "adafactor":
+            if p.ndim >= 2 and p.shape[-1] >= cfg.factored_min \
+                    and p.shape[-2] >= cfg.factored_min:
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros_like(p, jnp.float32)}
+        raise ValueError(cfg.kind)
+
+    moments = jax.tree_util.tree_map(per_leaf, params)
+    return {"count": jnp.zeros((), jnp.int32), "mu": moments}
+
+
+# --------------------------------------------------------------- update
+def opt_update(cfg: OptCfg, grads, state, params, lr):
+    count = state["count"] + 1
+    cf = count.astype(jnp.float32)
+
+    def leaf(g, s, p):
+        gf = g.astype(jnp.float32)
+        if cfg.kind == "sgdm":
+            m = cfg.momentum * s["m"] + gf
+            upd = m
+            new_s = {"m": m}
+        elif cfg.kind == "adamw":
+            m = cfg.b1 * s["m"] + (1 - cfg.b1) * gf
+            v = cfg.b2 * s["v"] + (1 - cfg.b2) * gf * gf
+            mh = m / (1 - cfg.b1 ** cf)
+            vh = v / (1 - cfg.b2 ** cf)
+            upd = mh / (jnp.sqrt(vh) + cfg.eps)
+            new_s = {"m": m, "v": v}
+        elif cfg.kind == "adamw8":
+            m = cfg.b1 * _dq8(s["m_q"], s["m_s"]) + (1 - cfg.b1) * gf
+            v = cfg.b2 * _dq8(s["v_q"], s["v_s"]) + (1 - cfg.b2) * gf * gf
+            mh = m / (1 - cfg.b1 ** cf)
+            vh = v / (1 - cfg.b2 ** cf)
+            upd = mh / (jnp.sqrt(vh) + cfg.eps)
+            mq, ms = _q8(m)
+            vq, vs = _q8(v)
+            new_s = {"m_q": mq, "m_s": ms, "v_q": vq, "v_s": vs}
+        elif cfg.kind == "adafactor":
+            g2 = gf * gf + 1e-30
+            if "vr" in s:
+                vr = cfg.b2 * s["vr"] + (1 - cfg.b2) * jnp.mean(g2, axis=-1)
+                vc = cfg.b2 * s["vc"] + (1 - cfg.b2) * jnp.mean(g2, axis=-2)
+                denom = jnp.sqrt(
+                    vr[..., None] * vc[..., None, :]
+                    / jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True)
+                                  [..., None], 1e-30))
+                upd = gf / jnp.maximum(denom, cfg.eps)
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = cfg.b2 * s["v"] + (1 - cfg.b2) * g2
+                upd = gf / (jnp.sqrt(v) + cfg.eps)
+                new_s = {"v": v}
+            # adafactor-style update clipping (RMS <= 1)
+            rms = jnp.sqrt(jnp.mean(jnp.square(upd)) + 1e-30)
+            upd = upd / jnp.maximum(1.0, rms)
+        else:
+            raise ValueError(cfg.kind)
+
+        if cfg.weight_decay and p.ndim >= 2:     # no decay on norms/biases
+            upd = upd + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * upd).astype(p.dtype)
+        return new_p, new_s
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_s = tdef.flatten_up_to(state["mu"])
+    out = [leaf(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+    new_params = tdef.unflatten([o[0] for o in out])
+    new_mu = tdef.unflatten([o[1] for o in out])
+    return new_params, {"count": count, "mu": new_mu}

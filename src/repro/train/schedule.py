@@ -1,0 +1,28 @@
+"""Learning-rate schedules."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+__all__ = ["ScheduleCfg", "lr_at"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ScheduleCfg:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    min_ratio: float = 0.1
+
+
+def lr_at(cfg: ScheduleCfg, step) -> jnp.ndarray:
+    s = jnp.asarray(step, jnp.float32)
+    warm = s / jnp.maximum(1.0, cfg.warmup_steps)
+    prog = jnp.clip((s - cfg.warmup_steps)
+                    / jnp.maximum(1.0, cfg.decay_steps - cfg.warmup_steps),
+                    0.0, 1.0)
+    cos = cfg.min_ratio + (1 - cfg.min_ratio) * 0.5 * (
+        1 + jnp.cos(jnp.pi * prog))
+    return cfg.peak_lr * jnp.where(s < cfg.warmup_steps, warm, cos)

@@ -1,0 +1,85 @@
+import numpy as np
+import pytest
+
+from repro.core.datapath import FWLConfig, concat_add, horner_fixed
+from repro.core.fixed_point import trunc_shift
+
+
+def hardware_concat_adder(u, w_u, v, w_v):
+    """Literal paper-Fig.3 structure: narrow adder + low-bit stitch."""
+    w_add = min(w_u, w_v)
+    if w_u >= w_v:
+        wide, w_wide, narrow = u, w_u, v
+    else:
+        wide, w_wide, narrow = v, w_v, u
+    e = w_wide - w_add
+    low = wide & ((1 << e) - 1) if e else 0
+    s = trunc_shift(wide, e) + narrow          # narrow adder at w_add
+    return (s << e) | low, w_wide              # stitch low bits back
+
+
+@pytest.mark.parametrize("w_u,w_v", [(8, 8), (8, 5), (5, 8), (16, 9)])
+def test_concat_adder_equals_exact_aligned_add(w_u, w_v):
+    rng = np.random.default_rng(0)
+    u = rng.integers(-(1 << 12), 1 << 12, size=500)
+    v = rng.integers(-(1 << 12), 1 << 12, size=500)
+    got, wg = concat_add(u, w_u, v, w_v)
+    hw, wh = hardware_concat_adder(u, w_u, v, w_v)
+    assert wg == wh == max(w_u, w_v)
+    np.testing.assert_array_equal(got, hw)
+
+
+def test_horner_order1_manual():
+    cfg = FWLConfig(w_in=8, w_out=8, w_a=(7,), w_o=(8,), w_b=8)
+    a, b = np.array(37), np.array(64)   # a=37/128, b=64/256
+    x = np.arange(0, 256, dtype=np.int64)
+    out = horner_fixed([a], b, x, cfg)
+    expect = ((37 * x) >> 7) + 64       # (wa+wi-wo)=7; out fwl 8
+    np.testing.assert_array_equal(out, expect)
+
+
+def test_horner_order2_manual():
+    cfg = FWLConfig(w_in=8, w_out=8, w_a=(6, 8), w_o=(8, 8), w_b=8)
+    a1, a2, b = np.array(-11), np.array(70), np.array(128)
+    x = np.arange(0, 256, dtype=np.int64)
+    h1 = (-11 * x) >> 6                  # 6+8-8
+    g = h1 + 70                          # both fwl 8
+    h2 = (g * x) >> 8                    # 8+8-8
+    expect = h2 + 128
+    out = horner_fixed([a1, a2], b, x, cfg)
+    np.testing.assert_array_equal(out, expect)
+
+
+def test_horner_candidate_broadcast():
+    cfg = FWLConfig(w_in=8, w_out=8, w_a=(7,), w_o=(8,), w_b=8)
+    a = np.arange(-4, 5)                 # candidate axis
+    b = np.zeros(9, dtype=np.int64)
+    x = np.arange(0, 16, dtype=np.int64)
+    out = horner_fixed([a], b, x, cfg)
+    assert out.shape == (9, 16)
+    for i, ai in enumerate(a):
+        np.testing.assert_array_equal(out[i], (ai * x) >> 7)
+
+
+def test_round_mults_variant():
+    cfg = FWLConfig(w_in=8, w_out=8, w_a=(7,), w_o=(8,), w_b=8,
+                    round_mults=True)
+    a, b = np.array(37), np.array(0)
+    x = np.arange(0, 256, dtype=np.int64)
+    out = horner_fixed([a], b, x, cfg)
+    expect = ((37 * x) + 64) >> 7
+    np.testing.assert_array_equal(out, expect)
+
+
+def test_fwl_validation():
+    with pytest.raises(ValueError):
+        FWLConfig(w_in=8, w_out=8, w_a=(8, 8), w_o=(8,), w_b=8)
+    with pytest.raises(ValueError):
+        FWLConfig(w_in=8, w_out=8, w_a=(), w_o=(), w_b=8)
+
+
+def test_d_bits():
+    cfg = FWLConfig(w_in=8, w_out=8, w_a=(7, 8), w_o=(8, 8), w_b=8)
+    assert cfg.d_bits(0) == 7 and cfg.d_bits(1) == 8
+    cfg16 = FWLConfig(w_in=8, w_out=16, w_a=(8, 16), w_o=(16, 16), w_b=16)
+    assert cfg16.d_bits(0) == 0 and cfg16.d_bits(1) == 8

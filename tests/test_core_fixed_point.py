@@ -1,0 +1,49 @@
+import numpy as np
+import pytest
+
+from repro.core.fixed_point import (grid_for_interval, hamming_weight,
+                                    min_signed_digits, round_half_away,
+                                    to_fixed, trunc_shift)
+
+
+def test_round_half_away():
+    assert round_half_away(0.5) == 1
+    assert round_half_away(-0.5) == -1
+    assert round_half_away(1.4) == 1
+    assert round_half_away(-1.4) == -1
+    np.testing.assert_array_equal(
+        round_half_away(np.array([2.5, -2.5, 0.49])), [3, -3, 0])
+
+
+def test_trunc_shift_is_floor():
+    # two's-complement arithmetic shift == floor division
+    v = np.array([-5, -4, -1, 0, 1, 7], dtype=np.int64)
+    np.testing.assert_array_equal(trunc_shift(v, 1), v // 2)
+    np.testing.assert_array_equal(trunc_shift(v, 2), v // 4)
+    np.testing.assert_array_equal(trunc_shift(v, -1), v * 2)
+
+
+def test_grid_endpoints_exclusive():
+    g = grid_for_interval(0.0, 1.0, 8)
+    assert g[0] == 0 and g[-1] == 255 and g.size == 256
+    g = grid_for_interval(1.0, 2.0, 4)
+    assert g[0] == 16 and g[-1] == 31
+
+
+def test_to_fixed_roundtrip():
+    x = np.linspace(-2, 2, 37)
+    ix = to_fixed(x, 12)
+    assert np.abs(ix / 4096 - x).max() <= 0.5 / 4096 + 1e-12
+
+
+def test_hamming_weight():
+    np.testing.assert_array_equal(
+        hamming_weight(np.array([0, 1, 3, 7, 255, 256, -3])),
+        [0, 1, 2, 3, 8, 1, 2])
+
+
+def test_csd_leq_hamming():
+    v = np.arange(0, 1024)
+    assert np.all(min_signed_digits(v) <= hamming_weight(v))
+    # classic example: 0b0111 = 7 -> 8-1, CSD weight 2 vs hamming 3
+    assert min_signed_digits(np.array([7]))[0] == 2

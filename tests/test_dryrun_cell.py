@@ -1,0 +1,64 @@
+"""Dry-run integration: one real cell (smallest arch) through
+launch/dryrun.py in a subprocess (512 fake devices), single- and
+multi-pod, plus the lut_value variant — asserting artifacts, roofline
+terms and the bit-exactness invariants the variants rely on."""
+
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def _dryrun(args, tmp):
+    cmd = [sys.executable, "-m", "repro.launch.dryrun",
+           "--out", str(tmp)] + args
+    r = subprocess.run(cmd, env=dict(os.environ,
+                                     PYTHONPATH=str(REPO / "src")),
+                       capture_output=True, text=True, timeout=1800)
+    assert r.returncode == 0, r.stderr[-3000:]
+    return r.stdout
+
+
+@pytest.mark.dryrun
+def test_single_and_multipod_cell(tmp_path):
+    _dryrun(["--arch", "internlm2-1.8b", "--shape", "decode_32k"], tmp_path)
+    _dryrun(["--arch", "internlm2-1.8b", "--shape", "decode_32k",
+             "--multi-pod"], tmp_path)
+    pod = json.loads(
+        (tmp_path / "internlm2-1.8b__decode_32k__pod.json").read_text())
+    mp = json.loads(
+        (tmp_path / "internlm2-1.8b__decode_32k__multipod.json").read_text())
+    assert pod["status"] == "ok" and mp["status"] == "ok"
+    assert pod["chips"] == 256 and mp["chips"] == 512
+    for r in (pod, mp):
+        rl = r["roofline"]
+        assert rl["t_memory"] > 0 and rl["hlo_flops"] > 0
+        assert r["memory"]["peak_bytes_per_device"] > 0
+    # multi-pod shards the batch further: per-device args shrink
+    assert mp["memory"]["argument_bytes"] < pod["memory"]["argument_bytes"]
+
+
+@pytest.mark.dryrun
+def test_variant_improves_memory_term(tmp_path):
+    _dryrun(["--arch", "internlm2-1.8b", "--shape", "train_4k"], tmp_path)
+    _dryrun(["--arch", "internlm2-1.8b", "--shape", "train_4k",
+             "--variant", "lut_index"], tmp_path)
+    base = json.loads(
+        (tmp_path / "internlm2-1.8b__train_4k__pod.json").read_text())
+    opt = json.loads(
+        (tmp_path / "internlm2-1.8b__train_4k__pod__lut_index.json")
+        .read_text())
+    assert opt["roofline"]["t_memory"] < base["roofline"]["t_memory"] * 0.9
+
+
+def test_skip_cells_recorded(tmp_path):
+    out = _dryrun(["--arch", "qwen2-7b", "--shape", "long_500k"], tmp_path)
+    rec = json.loads(
+        (tmp_path / "qwen2-7b__long_500k__pod.json").read_text())
+    assert rec["status"] == "skip"
+    assert "sub-quadratic" in rec["reason"]

@@ -1,0 +1,210 @@
+"""Model-zoo behaviour tests: every block family forward/train/decode,
+prefill->decode consistency vs teacher-forced forward, flash==dense
+attention, SWA ring cache, and PPA-activation integration."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import (ModelCfg, ShardCtx, StageCfg, count_params,
+                          decode_step, forward_hidden, init_params, loss_fn,
+                          make_model_acts, param_specs, prefill)
+from repro.models.layers import lm_head_logits
+
+BASE = dict(d_model=64, n_q=4, n_kv=2, head_dim=16, d_ff=128, vocab=256,
+            act_impl="exact", ce_chunks=2, compute_dtype="float32")
+
+
+def _cfg(name, **kw):
+    d = dict(BASE)
+    d.update(kw)
+    return ModelCfg(arch=name, **d)
+
+
+CFGS = {
+    "dense": _cfg("dense", family="dense", stages=(StageCfg("dec", 2),)),
+    "dense_bias_qknorm": _cfg("dbq", family="dense",
+                              stages=(StageCfg("dec", 2),),
+                              qkv_bias=True, qk_norm=True),
+    "swa": _cfg("swa", family="dense", stages=(StageCfg("dec", 2, window=8),)),
+    "moe": _cfg("moe", family="moe",
+                stages=(StageCfg("dec", 1), StageCfg("dec", 2, moe=True)),
+                moe_experts=8, moe_topk=2, moe_dff=96, moe_shared=1,
+                capacity_factor=4.0),
+    "moe_sigmoid": _cfg("moes", family="moe",
+                        stages=(StageCfg("dec", 1, moe=True),),
+                        moe_experts=8, moe_topk=2, moe_dff=96,
+                        router_score="sigmoid", capacity_factor=4.0),
+    "hybrid": _cfg("hyb", family="hybrid",
+                   stages=(StageCfg("hyb", 1), StageCfg("hyb", 1, window=8)),
+                   ssm_inner=128, ssm_state=8, ssm_dt_rank=16, ssm_chunk=4),
+    "rwkv": _cfg("rwkv", family="ssm", stages=(StageCfg("rwkv", 2),),
+                 rwkv_decay_lora=8, rwkv_chunk=4),
+    "encdec": _cfg("ed", family="audio", stages=(StageCfg("xdec", 2),),
+                   enc_layers=2, enc_seq=24, norm="layernorm", gate="gelu",
+                   tie_embeddings=False),
+    "vlm": _cfg("vlm", family="vlm", stages=(StageCfg("dec", 2),),
+                vision_tokens=8),
+}
+
+
+def _extra(cfg, b=2):
+    rng = np.random.default_rng(42)
+    out = {}
+    if cfg.enc_layers:
+        out["enc_feats"] = jnp.asarray(
+            rng.normal(0, 0.1, (b, cfg.enc_seq, cfg.d_model)), jnp.float32)
+    if cfg.vision_tokens:
+        out["vision_embeds"] = jnp.asarray(
+            rng.normal(0, 0.02, (b, cfg.vision_tokens, cfg.d_model)),
+            jnp.float32)
+    return out
+
+
+@pytest.mark.parametrize("name", sorted(CFGS))
+def test_forward_and_grad(name):
+    cfg = CFGS[name]
+    params = init_params(param_specs(cfg), jax.random.PRNGKey(0))
+    acts = make_model_acts(cfg)
+    ctx = ShardCtx()
+    batch = {"tokens": jnp.ones((2, 16), jnp.int32),
+             "labels": jnp.ones((2, 16), jnp.int32), **_extra(cfg)}
+    loss, metrics = loss_fn(params, cfg, batch, acts, ctx)
+    assert jnp.isfinite(loss)
+    g = jax.grad(lambda p: loss_fn(p, cfg, batch, acts, ctx)[0])(params)
+    leaves = jax.tree_util.tree_leaves(g)
+    assert all(jnp.isfinite(x).all() for x in leaves)
+    # at least the embedding must receive gradient
+    assert float(jnp.abs(g["embed"]).max()) > 0
+
+
+@pytest.mark.parametrize("name", sorted(CFGS))
+def test_prefill_decode_matches_forward(name):
+    """Greedy-decode logits at position T must equal teacher-forced logits."""
+    cfg = CFGS[name]
+    params = init_params(param_specs(cfg), jax.random.PRNGKey(1))
+    acts = make_model_acts(cfg)
+    ctx = ShardCtx()
+    rng = np.random.default_rng(0)
+    t = 12
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (2, t + 1)), jnp.int32)
+    extra = _extra(cfg)
+    h, _ = forward_hidden(params, cfg, {"tokens": toks, **extra}, acts, ctx)
+    if cfg.vision_tokens:
+        h = h[:, cfg.vision_tokens:]
+    head = params.get("lm_head", params["embed"])
+    ref = lm_head_logits(h[:, t].astype(jnp.float32),
+                         head.astype(jnp.float32))
+    _, cache = prefill(params, cfg, {"tokens": toks[:, :t], **extra},
+                       cache_len=32, acts=acts, ctx=ctx,
+                       cache_dtype=jnp.float32)
+    pos = jnp.full((2,), t + cfg.vision_tokens, jnp.int32)
+    lg, _ = decode_step(params, cfg, cache, toks[:, t:t + 1], pos, acts, ctx)
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(lg),
+                               atol=2e-4, rtol=1e-3)
+
+
+def test_multi_step_decode_consistency():
+    """Decode 4 tokens one-by-one == teacher-forced forward at each step."""
+    cfg = CFGS["dense"]
+    params = init_params(param_specs(cfg), jax.random.PRNGKey(2))
+    acts = make_model_acts(cfg)
+    ctx = ShardCtx()
+    rng = np.random.default_rng(3)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (2, 16)), jnp.int32)
+    t0 = 8
+    _, cache = prefill(params, cfg, {"tokens": toks[:, :t0]}, cache_len=32,
+                       acts=acts, ctx=ctx, cache_dtype=jnp.float32)
+    h, _ = forward_hidden(params, cfg, {"tokens": toks}, acts, ctx)
+    head = params["embed"].astype(jnp.float32)
+    for step in range(4):
+        t = t0 + step
+        lg, cache = decode_step(params, cfg, cache, toks[:, t:t + 1],
+                                jnp.full((2,), t, jnp.int32), acts, ctx)
+        ref = lm_head_logits(h[:, t].astype(jnp.float32), head)
+        np.testing.assert_allclose(np.asarray(ref), np.asarray(lg),
+                                   atol=2e-4, rtol=1e-3)
+
+
+def test_flash_matches_dense():
+    cfg_d = CFGS["dense"]
+    cfg_f = cfg_d.replace(attn_impl="flash", flash_chunk=8)
+    params = init_params(param_specs(cfg_d), jax.random.PRNGKey(4))
+    acts = make_model_acts(cfg_d)
+    ctx = ShardCtx()
+    toks = jnp.asarray(np.random.default_rng(5).integers(0, 256, (2, 24)),
+                       jnp.int32)
+    hd, _ = forward_hidden(params, cfg_d, {"tokens": toks}, acts, ctx)
+    hf, _ = forward_hidden(params, cfg_f, {"tokens": toks}, acts, ctx)
+    np.testing.assert_allclose(np.asarray(hd), np.asarray(hf),
+                               atol=1e-4, rtol=1e-3)
+
+
+def test_flash_matches_dense_swa():
+    cfg_d = CFGS["swa"]
+    cfg_f = cfg_d.replace(attn_impl="flash", flash_chunk=4)
+    params = init_params(param_specs(cfg_d), jax.random.PRNGKey(6))
+    acts = make_model_acts(cfg_d)
+    ctx = ShardCtx()
+    toks = jnp.asarray(np.random.default_rng(7).integers(0, 256, (2, 24)),
+                       jnp.int32)
+    hd, _ = forward_hidden(params, cfg_d, {"tokens": toks}, acts, ctx)
+    hf, _ = forward_hidden(params, cfg_f, {"tokens": toks}, acts, ctx)
+    np.testing.assert_allclose(np.asarray(hd), np.asarray(hf),
+                               atol=1e-4, rtol=1e-3)
+
+
+def test_swa_ring_cache_long_decode():
+    """Decode far past the window: ring cache (len=window) must keep
+    matching a full-cache reference."""
+    cfg = CFGS["swa"]   # window 8
+    params = init_params(param_specs(cfg), jax.random.PRNGKey(8))
+    acts = make_model_acts(cfg)
+    ctx = ShardCtx()
+    toks = jnp.asarray(np.random.default_rng(9).integers(0, 256, (1, 40)),
+                       jnp.int32)
+    t0 = 16
+    # ring cache: length exactly the window
+    _, ring = prefill(params, cfg, {"tokens": toks[:, :t0]}, cache_len=8,
+                      acts=acts, ctx=ctx, cache_dtype=jnp.float32)
+    # full cache: length covers everything
+    _, full = prefill(params, cfg, {"tokens": toks[:, :t0]}, cache_len=64,
+                      acts=acts, ctx=ctx, cache_dtype=jnp.float32)
+    for step in range(12):
+        t = t0 + step
+        tok = toks[:, t:t + 1]
+        pos = jnp.full((1,), t, jnp.int32)
+        lr, ring = decode_step(params, cfg, ring, tok, pos, acts, ctx)
+        lf, full = decode_step(params, cfg, full, tok, pos, acts, ctx)
+        np.testing.assert_allclose(np.asarray(lr), np.asarray(lf),
+                                   atol=1e-4, rtol=1e-3)
+
+
+def test_ppa_model_close_to_exact():
+    """16-bit FQA tables in the full model stay close to the float model."""
+    cfg_e = CFGS["dense"]
+    cfg_p = cfg_e.replace(act_impl="ppa")
+    params = init_params(param_specs(cfg_e), jax.random.PRNGKey(10))
+    ctx = ShardCtx()
+    batch = {"tokens": jnp.ones((2, 16), jnp.int32),
+             "labels": jnp.ones((2, 16), jnp.int32)}
+    le, _ = loss_fn(params, cfg_e, batch, make_model_acts(cfg_e), ctx)
+    lp, _ = loss_fn(params, cfg_p, batch, make_model_acts(cfg_p), ctx)
+    assert abs(float(le) - float(lp)) < 0.05
+    g = jax.grad(lambda p: loss_fn(p, cfg_p, batch,
+                                   make_model_acts(cfg_p), ctx)[0])(params)
+    assert all(jnp.isfinite(x).all() for x in jax.tree_util.tree_leaves(g))
+
+
+def test_param_count_formula():
+    """Spec tree size matches the analytic dense-layer count."""
+    cfg = CFGS["dense"]
+    params = init_params(param_specs(cfg), jax.random.PRNGKey(0))
+    d, f, v = cfg.d_model, cfg.d_ff, cfg.vocab
+    hq, hk, dh = cfg.n_q, cfg.n_kv, cfg.head_dim
+    per_layer = (d * hq * dh + 2 * d * hk * dh + hq * dh * d   # attn
+                 + 3 * d * f                                   # gated mlp
+                 + 2 * d)                                      # norms
+    expect = v * d + d + 2 * per_layer
+    assert count_params(params) == expect

@@ -1,0 +1,111 @@
+"""Paper-claim validation: segment counts and MAE from Tables I-V.
+
+Exact-match cells are asserted exactly; the three documented discrepancies
+(16-bit O2 rows — see DESIGN.md §4 / EXPERIMENTS.md: our strict floor-
+truncation semantics provably cannot reach the paper's counts, verified by
+exhaustive coefficient search) are asserted at our reproduced values and
+within 35% of the paper's.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (FWLConfig, PPAScheme, compile_ppa_table,
+                        table_mae_report)
+
+F = FWLConfig
+S = PPAScheme
+
+# (naf, cfg, scheme, paper_segs, our_segs, paper_mae)
+EXACT_CELLS = [
+    # Table II — piecewise linear
+    ("sigmoid", F(8, 8, (7,), (8,), 8), S(1, None, "fqa"), 18, 18, 1.953e-3),
+    ("sigmoid", F(8, 8, (8,), (8,), 8),
+     S(1, None, "plac", segmenter="bisection"), 144, 144, 1.953e-3),
+    ("sigmoid", F(8, 16, (16,), (16,), 14), S(1, None, "fqa"), 33, 33, 7.599e-6),
+    ("tanh", F(8, 8, (8,), (8,), 8), S(1, None, "fqa"), 15, 15, 1.945e-3),
+    ("tanh", F(8, 8, (8,), (8,), 8),
+     S(1, None, "plac", segmenter="bisection"), 98, 98, 1.945e-3),
+    ("tanh", F(8, 16, (14,), (16,), 16), S(1, None, "fqa"), 79, 79, 7.606e-6),
+    # Table IV — multiplierless PWL
+    ("sigmoid", F(8, 8, (8,), (8,), 8), S(1, 2, "fqa"), 24, 24, 1.953e-3),
+    ("sigmoid", F(8, 8, (8,), (8,), 8), S(1, 4, "fqa"), 18, 18, 1.953e-3),
+    ("sigmoid", F(8, 8, (1,), (8,), 8), S(1, 1, "mlplac"), 60, 60, 1.953e-3),
+    ("tanh", F(8, 8, (7,), (8,), 8), S(1, 2, "fqa"), 28, 28, 1.945e-3),
+    ("tanh", F(8, 8, (8,), (8,), 8), S(1, 4, "fqa"), 17, 17, 1.945e-3),
+]
+
+NEAR_CELLS = [
+    # QPA reimplementation: segmentation details differ slightly from [31]
+    ("sigmoid", F(8, 8, (8,), (8,), 8), S(1, None, "qpa"), 60, 58, 1.953e-3),
+    ("sigmoid", F(8, 16, (16,), (16,), 16), S(1, None, "qpa"), 45, 48, 7.599e-6),
+    ("tanh", F(8, 8, (8,), (8,), 8), S(1, None, "qpa"), 34, 39, 1.945e-3),
+    ("tanh", F(8, 8, (1,), (8,), 8), S(1, 1, "mlplac"), 54, 51, 1.945e-3),
+]
+
+SLOW_CELLS = [
+    # Table III / V — order 2 (8-bit rows exact; 16-bit rows documented)
+    ("sigmoid", F(8, 8, (6, 8), (8, 8), 8), S(2, None, "fqa"), 10, 10, 1.953e-3),
+    ("sigmoid", F(8, 16, (8, 16), (16, 16), 16), S(2, None, "fqa"),
+     12, 15, 7.599e-6),
+    ("tanh", F(8, 8, (8, 6), (8, 8), 8), S(2, None, "fqa"), 8, 8, 1.945e-3),
+    ("tanh", F(8, 16, (8, 16), (16, 16), 16), S(2, None, "fqa"),
+     16, 19, 7.606e-6),
+    ("sigmoid", F(8, 16, (8, 16), (16, 16), 16), S(2, 3, "fqa"),
+     12, 15, 7.599e-6),
+]
+
+
+def _check(naf, cfg, scheme, paper_segs, our_segs, paper_mae):
+    tab = compile_ppa_table(naf, cfg, scheme)
+    assert tab.num_segments == our_segs, (
+        f"{naf} {scheme.tag}: got {tab.num_segments}, expected {our_segs} "
+        f"(paper: {paper_segs})")
+    assert tab.num_segments <= paper_segs * 1.35
+    assert abs(tab.mae_hard - paper_mae) / paper_mae < 0.02
+    # FQA's central claim: MAE_0 == 0 (the table exactly matches the
+    # round-quantized function) whenever MAE_t is the quantization floor
+    if scheme.quantizer == "fqa":
+        assert tab.stats["mae0"] == 0.0
+
+
+@pytest.mark.parametrize("cell", EXACT_CELLS,
+                         ids=[f"{c[0]}-{c[2].tag}-w{c[1].w_out}-{c[3]}"
+                              for c in EXACT_CELLS])
+def test_paper_exact_cells(cell):
+    _check(*cell)
+
+
+@pytest.mark.parametrize("cell", NEAR_CELLS,
+                         ids=[f"{c[0]}-{c[2].tag}-w{c[1].w_out}-{c[3]}"
+                              for c in NEAR_CELLS])
+def test_paper_near_cells(cell):
+    _check(*cell)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("cell", SLOW_CELLS,
+                         ids=[f"{c[0]}-{c[2].tag}-w{c[1].w_out}-{c[3]}"
+                              for c in SLOW_CELLS])
+def test_paper_order2_cells(cell):
+    _check(*cell)
+
+
+def test_fqa_beats_baselines_under_same_fwl():
+    """The paper's headline: fewer segments than QPA/PLAC at equal FWLs."""
+    cfg = F(8, 8, (8,), (8,), 8)
+    fqa = compile_ppa_table("sigmoid", cfg, S(1, None, "fqa"))
+    qpa = compile_ppa_table("sigmoid", cfg, S(1, None, "qpa"))
+    plac = compile_ppa_table("sigmoid", cfg,
+                             S(1, None, "plac", segmenter="bisection"))
+    assert fqa.num_segments < qpa.num_segments < plac.num_segments
+
+
+def test_mae_floor_is_quantization_floor():
+    cfg = F(8, 8, (7,), (8,), 8)
+    tab = compile_ppa_table("sigmoid", cfg, S(1, None, "fqa"))
+    rep = table_mae_report(tab)
+    # MAE_hard == MAE_q when MAE_0 == 0 (paper Sec. III-A)
+    assert rep["mae0"] == 0.0
+    assert abs(rep["mae_hard"] - rep["mae_q"]) < 1e-12
+    assert rep["mae_hard"] <= 0.5 ** 9 + 1e-12

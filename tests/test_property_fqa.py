@@ -1,0 +1,108 @@
+"""Property-based tests (hypothesis) on the FQA system invariants."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (FWLConfig, PPAScheme, compile_ppa_table,
+                        eval_table_int, get_naf, grid_for_interval,
+                        make_quantizer)
+from repro.core.datapath import horner_fixed
+from repro.core.fixed_point import round_half_away
+
+NAFS = ["sigmoid", "tanh", "exp2_frac", "recip", "log2"]
+
+
+@st.composite
+def fwl_configs(draw, max_order=2):
+    order = draw(st.integers(1, max_order))
+    w_in = draw(st.integers(5, 8))
+    w_out = draw(st.integers(6, 12))
+    w_a = tuple(draw(st.integers(4, 10)) for _ in range(order))
+    w_o = tuple(draw(st.integers(max(4, w_in - 2), 12)) for _ in range(order))
+    w_b = draw(st.integers(max(5, w_out - 2), w_out + 2))
+    return FWLConfig(w_in=w_in, w_out=w_out, w_a=w_a, w_o=w_o, w_b=w_b)
+
+
+@settings(max_examples=15, deadline=None)
+@given(cfg=fwl_configs(max_order=1), naf=st.sampled_from(NAFS))
+def test_table_respects_mae_target(cfg, naf):
+    """Every compiled table satisfies MAE_hard <= MAE_t... whenever a table
+    exists at all (unreachable targets raise instead of silently failing)."""
+    mae_t = max(0.5 ** (cfg.w_out + 1), 0.5 ** (cfg.w_b + 1)) * 2
+    try:
+        tab = compile_ppa_table(naf, cfg, PPAScheme(cfg.order, None, "fqa_fast"),
+                                mae_t=mae_t)
+    except RuntimeError:
+        return  # infeasible FWL/MAE combination — acceptable outcome
+    assert tab.mae_hard <= mae_t + 1e-12
+    # packed table re-evaluation agrees with the stored per-segment MAE
+    spec = get_naf(naf)
+    x = grid_for_interval(*tab.interval, cfg.w_in)
+    y = eval_table_int(tab, x) / (1 << cfg.w_out)
+    assert np.abs(spec(x / (1 << cfg.w_in)) - y).max() <= tab.mae_hard + 1e-12
+
+
+@settings(max_examples=10, deadline=None)
+@given(cfg=fwl_configs(max_order=2), naf=st.sampled_from(["sigmoid", "tanh"]),
+       seed=st.integers(0, 2 ** 16))
+def test_fqa_never_worse_than_round_quantization(cfg, naf, seed):
+    """FQA's search space contains d=0, so its per-segment MAE is <= PLAC's
+    on the same segment with the same pre-quantization coefficients."""
+    rng = np.random.default_rng(seed)
+    spec = get_naf(naf)
+    x_all = grid_for_interval(*spec.interval, cfg.w_in)
+    g = rng.integers(4, max(5, x_all.size // 2))
+    s = rng.integers(0, x_all.size - g)
+    x = x_all[s: s + g]
+    f = spec(x / (1 << cfg.w_in))
+    fqa = make_quantizer("fqa").fit_segment(x, f, cfg, 0.0, mode="best")
+    plac = make_quantizer("plac").fit_segment(x, f, cfg, 0.0, mode="best")
+    assert fqa.mae <= plac.mae + 1e-12
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2 ** 16))
+def test_horner_matches_python_ints(seed):
+    """Vectorised datapath == scalar big-int python reference (no overflow)."""
+    rng = np.random.default_rng(seed)
+    order = int(rng.integers(1, 4))
+    cfg = FWLConfig(w_in=int(rng.integers(4, 10)),
+                    w_out=int(rng.integers(4, 16)),
+                    w_a=tuple(int(rng.integers(2, 16)) for _ in range(order)),
+                    w_o=tuple(int(rng.integers(4, 16)) for _ in range(order)),
+                    w_b=int(rng.integers(4, 16)))
+    a = [int(rng.integers(-(1 << 10), 1 << 10)) for _ in range(order)]
+    b = int(rng.integers(-(1 << 10), 1 << 10))
+    x = rng.integers(0, 1 << cfg.w_in, size=32).astype(np.int64)
+
+    def scalar(xv: int) -> int:
+        h = (a[0] * xv) >> (cfg.w_a[0] + cfg.w_in - cfg.w_o[0]) \
+            if cfg.w_a[0] + cfg.w_in - cfg.w_o[0] >= 0 else \
+            (a[0] * xv) << (cfg.w_o[0] - cfg.w_a[0] - cfg.w_in)
+        cur = cfg.w_o[0]
+        for i in range(1, order):
+            w = max(cur, cfg.w_a[i])
+            gi = (h << (w - cur)) + (a[i] << (w - cfg.w_a[i]))
+            sh = w + cfg.w_in - cfg.w_o[i]
+            h = (gi * xv) >> sh if sh >= 0 else (gi * xv) << (-sh)
+            cur = cfg.w_o[i]
+        w = max(cur, cfg.w_b)
+        out = (h << (w - cur)) + (b << (w - cfg.w_b))
+        sh = w - cfg.w_out
+        return out >> sh if sh >= 0 else out << (-sh)
+
+    got = horner_fixed([np.array(ai) for ai in a], np.array(b), x, cfg)
+    want = np.array([scalar(int(xi)) for xi in x])
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=8, deadline=None)
+@given(w_out=st.integers(6, 14), naf=st.sampled_from(NAFS))
+def test_fq_round_defines_floor(w_out, naf):
+    """MAE_q = max |f_q - f| <= half ULP of the output FWL."""
+    spec = get_naf(naf)
+    x = grid_for_interval(*spec.interval, 8) / 256.0
+    f = spec(x)
+    f_q = round_half_away(f * (1 << w_out)) / (1 << w_out)
+    assert np.abs(f_q - f).max() <= 0.5 ** (w_out + 1) + 1e-15

@@ -1,0 +1,82 @@
+"""Hypothesis property tests on framework invariants (beyond the FQA-core
+properties in test_property_fqa.py)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import FWLConfig, PPAScheme, get_table
+from repro.data import SyntheticLM
+from repro.distributed.compression import q8_decode, q8_encode
+from repro.kernels import pack_table, ppa_apply
+from repro.models.common import pad_to
+from repro.train import ScheduleCfg, lr_at
+
+CFG16 = FWLConfig(8, 16, (8, 16), (16, 16), 16)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 10_000), st.integers(1, 512))
+def test_pad_to_properties(n, m):
+    p = pad_to(n, m)
+    assert p >= n and p % m == 0 and p - n < m
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_synthetic_data_pure_function_of_step(seed):
+    d = SyntheticLM(vocab=257, seq_len=17, global_batch=4, seed=seed % 97)
+    step = seed % 1000
+    a, b = d.batch_at(step), d.batch_at(step)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    assert a["tokens"].min() >= 0 and a["tokens"].max() < 257
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.floats(-1e3, 1e3, allow_nan=False), min_size=1,
+                max_size=64))
+def test_q8_roundtrip_error_bound(xs):
+    """Quantization error is bounded by scale/2 = max|x|/254 per row."""
+    x = jnp.asarray(xs, jnp.float32)
+    q, s = q8_encode(x)
+    err = np.abs(np.asarray(q8_decode(q, s) - x))
+    bound = float(np.max(np.abs(np.asarray(x)))) / 254.0 + 1e-6
+    assert err.max() <= bound + 1e-6
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 100_000))
+def test_lr_schedule_bounded_and_nonnegative(step):
+    cfg = ScheduleCfg(peak_lr=1e-3, warmup_steps=50, decay_steps=1000)
+    lr = float(lr_at(cfg, step))
+    assert 0.0 <= lr <= cfg.peak_lr + 1e-12
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.floats(-30, 30, allow_nan=False, allow_infinity=False))
+def test_ppa_sigmoid_monotone_region(x0):
+    """Table sigmoid is within MAE of exact everywhere on the real line
+    (range reduction + symmetry + saturation are total)."""
+    tab = get_table("sigmoid_wide", CFG16, PPAScheme(order=2,
+                                                     quantizer="fqa"))
+    tc = pack_table(tab)
+    x = jnp.asarray([x0], jnp.float32)
+    y = float(ppa_apply(tc, x)[0])
+    ref = float(jax.nn.sigmoid(x)[0])
+    assert abs(y - ref) < 5e-4
+    assert 0.0 <= y <= 1.0
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 30), st.integers(2, 8))
+def test_ppa_softmax_rows_sum_to_one(rows, cols):
+    from repro.kernels import ppa_softmax
+    tab = get_table("exp2_frac", CFG16, PPAScheme(order=2, quantizer="fqa"))
+    tc = pack_table(tab)
+    rng = np.random.default_rng(rows * 31 + cols)
+    x = jnp.asarray(rng.normal(0, 5, (rows, cols)), jnp.float32)
+    y = np.asarray(ppa_softmax(tc, x))
+    np.testing.assert_allclose(y.sum(-1), 1.0, atol=1e-4)
+    assert (y >= 0).all()

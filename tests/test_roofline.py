@@ -1,0 +1,83 @@
+"""Roofline unit tests: the trip-count-aware HLO parser on a synthetic
+module, and the Roofline term arithmetic."""
+
+import numpy as np
+
+from repro.roofline import HW_V5E, Roofline, collective_bytes
+from repro.roofline.hlo_costs import analyze_hlo_text
+
+SYNTH = """\
+HloModule jit_step, num_partitions=4
+
+%body.1 (arg: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+  %arg = (s32[], f32[8,16]) parameter(0)
+  %i = s32[] get-tuple-element(%arg), index=0
+  %x = f32[8,16]{1,0} get-tuple-element(%arg), index=1
+  %w = f32[16,16]{1,0} constant({...})
+  %y = f32[8,16]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,16]{1,0} all-reduce(%y), replica_groups={}, to_apply=%sum.1
+  %one = s32[] constant(1)
+  %ni = s32[] add(%i, %one)
+  ROOT %out = (s32[], f32[8,16]) tuple(%ni, %ar)
+}
+
+%cond.1 (arg: (s32[], f32[8,16])) -> pred[] {
+  %arg = (s32[], f32[8,16]) parameter(0)
+  %i = s32[] get-tuple-element(%arg), index=0
+  %n = s32[] constant(12)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+%sum.1 (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+
+ENTRY %main.1 (p0: f32[8,16]) -> f32[8,16] {
+  %p0 = f32[8,16]{1,0} parameter(0)
+  %zero = s32[] constant(0)
+  %t = (s32[], f32[8,16]) tuple(%zero, %p0)
+  %loop = (s32[], f32[8,16]) while(%t), condition=%cond.1, body=%body.1, backend_config={"known_trip_count":{"n":"12"}}
+  ROOT %r = f32[8,16]{1,0} get-tuple-element(%loop), index=1
+}
+"""
+
+
+def test_parser_counts_loop_trips():
+    hc = analyze_hlo_text(SYNTH)
+    # dot: 2 * 8*16 * 16 flops, executed 12 times
+    assert hc.flops == 12 * 2 * 8 * 16 * 16
+    # all-reduce payload: 8*16*4 bytes * 12 trips
+    assert hc.coll_bytes["all-reduce"] == 12 * 8 * 16 * 4
+    assert hc.trip_counts.get("body.1") == 12
+    assert hc.bytes_accessed > 0
+
+
+def test_roofline_terms_and_bottleneck():
+    r = Roofline(arch="a", shape="s", mesh="m", chips=256,
+                 hlo_flops=197e12, hlo_bytes=819e9 * 2,
+                 coll_bytes={"all-reduce": int(50e9)},
+                 model_flops=0.5 * 197e12 * 256)
+    assert abs(r.t_compute - 1.0) < 1e-9
+    assert abs(r.t_memory - 2.0) < 1e-9
+    assert abs(r.t_collective - 1.0) < 1e-9
+    assert r.bottleneck == "memory"
+    assert abs(r.roofline_fraction - 0.25) < 1e-9
+
+
+def test_decode_bandwidth_roof():
+    """With ideal_bytes set, decode cells score against the BW roof."""
+    r = Roofline(arch="a", shape="decode", mesh="m", chips=256,
+                 hlo_flops=1e9, hlo_bytes=819e9,
+                 coll_bytes={}, model_flops=1e9,
+                 ideal_bytes=0.5 * 819e9 * 256)
+    assert abs(r.roofline_fraction - 0.5) < 1e-6
+
+
+def test_collective_regex_kinds():
+    txt = ("  %ag = bf16[4,8]{1,0} all-gather(%x), dimensions={0}\n"
+           "  %rs = f32[2,8]{1,0} reduce-scatter(%y), dimensions={0}\n")
+    out = collective_bytes(txt)
+    assert out["all-gather"] == 4 * 8 * 2
+    assert out["reduce-scatter"] == 2 * 8 * 4

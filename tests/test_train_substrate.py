@@ -1,0 +1,216 @@
+"""Training substrate: optimizers, schedule, microbatching, data,
+checkpoint round-trips (incl. crash-restart), watchdog."""
+
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import latest_step, restore, save
+from repro.data import SyntheticLM, TokenFileDataset, write_token_file
+from repro.models import ShardCtx, init_params, param_specs
+from repro.configs import get_smoke_config
+from repro.runtime import StepHang, Watchdog
+from repro.train import (OptCfg, ScheduleCfg, TrainCfg, lr_at,
+                         make_train_step, opt_init, opt_update, train_init)
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+# ----------------------------------------------------------------- optim
+def _rosenbrock_params():
+    return {"x": jnp.asarray([-1.2, 1.0, 0.5, 2.0], jnp.float32),
+            "w": jnp.ones((4, 4), jnp.float32) * 0.3}
+
+
+def _quad_loss(p):
+    return jnp.sum((p["x"] - 1.0) ** 2) + jnp.sum((p["w"] - 0.5) ** 2)
+
+
+@pytest.mark.parametrize("kind", ["sgdm", "adamw", "adamw8", "adafactor"])
+def test_optimizer_converges_on_quadratic(kind):
+    cfg = OptCfg(kind=kind, weight_decay=0.0,
+                 factored_min=2)   # force factoring for the (4,4) leaf
+    p = _rosenbrock_params()
+    s = opt_init(cfg, p)
+    lr = 0.05 if kind != "sgdm" else 0.02
+    for _ in range(400):
+        g = jax.grad(_quad_loss)(p)
+        p, s = opt_update(cfg, g, s, p, lr)
+    assert float(_quad_loss(p)) < 1e-2, kind
+
+
+def test_adamw8_tracks_adamw():
+    """int8 moments stay close to fp32 moments over a short run."""
+    p1 = _rosenbrock_params()
+    p2 = _rosenbrock_params()
+    s1 = opt_init(OptCfg(kind="adamw", weight_decay=0.0), p1)
+    s2 = opt_init(OptCfg(kind="adamw8", weight_decay=0.0), p2)
+    for _ in range(50):
+        g1 = jax.grad(_quad_loss)(p1)
+        g2 = jax.grad(_quad_loss)(p2)
+        p1, s1 = opt_update(OptCfg(kind="adamw", weight_decay=0.0),
+                            g1, s1, p1, 0.05)
+        p2, s2 = opt_update(OptCfg(kind="adamw8", weight_decay=0.0),
+                            g2, s2, p2, 0.05)
+    d = max(float(jnp.abs(a - b).max())
+            for a, b in zip(jax.tree_util.tree_leaves(p1),
+                            jax.tree_util.tree_leaves(p2)))
+    assert d < 0.05
+
+
+def test_schedule_shape():
+    cfg = ScheduleCfg(peak_lr=1e-3, warmup_steps=10, decay_steps=100,
+                      min_ratio=0.1)
+    assert float(lr_at(cfg, 0)) == 0.0
+    assert abs(float(lr_at(cfg, 10)) - 1e-3) < 1e-9
+    assert float(lr_at(cfg, 100)) == pytest.approx(1e-4, rel=1e-3)
+    assert float(lr_at(cfg, 5)) == pytest.approx(5e-4, rel=1e-3)
+
+
+# ------------------------------------------------------------ train_step
+def test_train_step_descends_and_accum_matches():
+    cfg = get_smoke_config("internlm2-1.8b")
+    params = init_params(param_specs(cfg), jax.random.PRNGKey(0))
+    ctx = ShardCtx()
+    data = SyntheticLM(vocab=cfg.vocab, seq_len=64, global_batch=8)
+    batch = {k: jnp.asarray(v) for k, v in data.batch_at(0).items()}
+
+    tcfg1 = TrainCfg(opt=OptCfg(kind="adamw"), accum_steps=1)
+    tcfg4 = TrainCfg(opt=OptCfg(kind="adamw"), accum_steps=4)
+    s1 = train_init(tcfg1, params)
+    s4 = train_init(tcfg4, params)
+    step1 = jax.jit(make_train_step(cfg, tcfg1, ctx))
+    step4 = jax.jit(make_train_step(cfg, tcfg4, ctx))
+    p1, s1, m1 = step1(params, s1, batch)
+    p4, s4, m4 = step4(params, s4, batch)
+    # same data, same grads (up to accumulation fp error)
+    d = max(float(jnp.abs(a - b).max())
+            for a, b in zip(jax.tree_util.tree_leaves(p1),
+                            jax.tree_util.tree_leaves(p4)))
+    assert d < 5e-5
+
+    # 10 steps descend
+    losses = []
+    p, s = params, train_init(tcfg1, params)
+    for i in range(10):
+        b = {k: jnp.asarray(v) for k, v in data.batch_at(i).items()}
+        p, s, m = step1(p, s, b)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0]
+
+
+# ----------------------------------------------------------------- data
+def test_synthetic_deterministic_and_host_disjoint():
+    d0 = SyntheticLM(vocab=128, seq_len=32, global_batch=8)
+    a = d0.batch_at(7)
+    b = d0.batch_at(7)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    # two hosts cover the global batch disjointly
+    h0 = SyntheticLM(vocab=128, seq_len=32, global_batch=8, host_id=0,
+                     num_hosts=2).batch_at(3)
+    h1 = SyntheticLM(vocab=128, seq_len=32, global_batch=8, host_id=1,
+                     num_hosts=2).batch_at(3)
+    assert h0["tokens"].shape == (4, 32)
+    assert not np.array_equal(h0["tokens"], h1["tokens"])
+    # labels are next-token targets
+    np.testing.assert_array_equal(a["tokens"][:, 1:], a["labels"][:, :-1])
+
+
+def test_memmap_dataset_cursor_roundtrip(tmp_path):
+    toks = np.arange(10_000, dtype=np.uint32) % 97
+    f = tmp_path / "toks.bin"
+    write_token_file(f, toks)
+    ds = TokenFileDataset(str(f), seq_len=16, global_batch=4)
+    b1 = ds.next_batch()
+    state = ds.state_dict()
+    b2 = ds.next_batch()
+    ds2 = TokenFileDataset(str(f), seq_len=16, global_batch=4)
+    ds2.load_state_dict(state)
+    b2r = ds2.next_batch()
+    np.testing.assert_array_equal(b2["tokens"], b2r["tokens"])
+    assert not np.array_equal(b1["tokens"], b2["tokens"])
+
+
+# ------------------------------------------------------------ checkpoint
+def test_checkpoint_roundtrip_and_gc(tmp_path):
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": {"c": jnp.ones((4,), jnp.bfloat16)}}
+    for step in (10, 20, 30, 40):
+        save(tmp_path, step, tree, extra={"next_step": step}, keep=2)
+    assert latest_step(tmp_path) == 40
+    # gc kept only the last 2
+    kept = sorted(p.name for p in tmp_path.iterdir())
+    assert kept == ["step_00000030", "step_00000040"]
+    like = jax.tree_util.tree_map(np.asarray, tree)
+    restored, extra = restore(tmp_path, 40, like)
+    np.testing.assert_array_equal(np.asarray(tree["a"]), restored["a"])
+    assert extra["next_step"] == 40
+
+
+def test_checkpoint_ignores_partial_tmp(tmp_path):
+    tree = {"a": jnp.ones((2,), jnp.float32)}
+    save(tmp_path, 5, tree, extra={})
+    # a crashed save leaves a .tmp dir — must be invisible
+    (tmp_path / "step_00000009.tmp").mkdir()
+    assert latest_step(tmp_path) == 5
+
+
+def test_crash_restart_end_to_end(tmp_path):
+    """launch/train.py: crash at step 30, restart resumes from ckpt 20
+    and reaches the same final state as an uninterrupted run."""
+    env = dict(os.environ, PYTHONPATH=str(REPO / "src"),
+               JAX_PLATFORMS="cpu")
+    base = [sys.executable, "-m", "repro.launch.train",
+            "--arch", "internlm2-1.8b", "--smoke", "--steps", "40",
+            "--ckpt-every", "20", "--batch", "4", "--seq", "64",
+            "--opt", "adamw"]
+    # uninterrupted reference
+    ref_dir = tmp_path / "ref"
+    r = subprocess.run(base + ["--ckpt-dir", str(ref_dir)],
+                       env=env, capture_output=True, text=True)
+    assert r.returncode == 0, r.stderr[-2000:]
+
+    # crashed + restarted run
+    crash_dir = tmp_path / "crash"
+    r1 = subprocess.run(base + ["--ckpt-dir", str(crash_dir),
+                                "--simulate-crash-at", "30"],
+                        env=env, capture_output=True, text=True)
+    assert r1.returncode == 42, r1.stderr[-2000:]
+    assert latest_step(crash_dir) == 20
+    r2 = subprocess.run(base + ["--ckpt-dir", str(crash_dir)],
+                        env=env, capture_output=True, text=True)
+    assert r2.returncode == 0, r2.stderr[-2000:]
+    assert "[resume] from checkpoint step 20" in r2.stdout
+
+    # deterministic data + deterministic init => identical final params
+    like_extra = json.loads(
+        (ref_dir / "step_00000040" / "manifest.json").read_text())
+    ref = np.load(ref_dir / "step_00000040" / "arrays.npz")
+    got = np.load(crash_dir / "step_00000040" / "arrays.npz")
+    for k in ref.files:
+        np.testing.assert_allclose(
+            ref[k].astype(np.float32), got[k].astype(np.float32),
+            atol=1e-5, err_msg=k)
+    assert like_extra["extra"]["next_step"] == 40
+
+
+# -------------------------------------------------------------- watchdog
+def test_watchdog_flags_stragglers_and_hangs():
+    import time
+    wd = Watchdog(straggler_factor=2.0, min_deadline_s=0.3,
+                  deadline_factor=2.0)
+    for _ in range(5):
+        wd.step(time.sleep, 0.01)
+    assert wd.stragglers == 0
+    wd.step(time.sleep, 0.05)      # 5x median -> straggler
+    assert wd.stragglers == 1
+    with pytest.raises(StepHang):
+        wd.step(time.sleep, 0.5)   # beyond the 0.3s deadline
+    assert wd.hangs == 1
