@@ -9,15 +9,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import FWLConfig, PPAScheme, eval_table_int, get_table
-from repro.kernels import (pack_table, ppa_apply, ppa_eval_2d, ppa_eval_ref,
-                           ppa_softmax)
+from repro.compiler import compile_or_load
+from repro.core import FWLConfig, PPAScheme, eval_table_int
+from repro.kernels import (pack_table, ppa_apply, ppa_eval_2d,
+                           ppa_eval_ref, ppa_eval_table, ppa_softmax)
 from benchmarks.common import emit, timeit
 
 
 def main() -> None:
-    tab = get_table("sigmoid", FWLConfig(8, 16, (8, 16), (16, 16), 16),
-                    PPAScheme(order=2, quantizer="fqa"))
+    tab = compile_or_load("sigmoid", FWLConfig(8, 16, (8, 16), (16, 16), 16),
+                          PPAScheme(order=2, quantizer="fqa"))
     tc = pack_table(tab)
     rng = np.random.default_rng(0)
     x = jnp.asarray(rng.integers(0, 256, (256, 1024)), jnp.int32)
@@ -37,10 +38,12 @@ def main() -> None:
 
     y_ref = np.asarray(ref(x))
     y_pal = np.asarray(pal(x))
+    y_tab = np.asarray(ppa_eval_table(tab, x))   # artifact->kernel adapter
     y_gold = eval_table_int(tab, np.asarray(x, np.int64))
     emit("kernel/bit_exact", 0.0,
          ref_eq_gold=bool((y_ref == y_gold).all()),
-         pallas_eq_gold=bool((y_pal == y_gold).all()))
+         pallas_eq_gold=bool((y_pal == y_gold).all()),
+         table_adapter_eq_gold=bool((y_tab == y_gold).all()))
 
     # model-level float act + softmax
     xf = jnp.asarray(rng.normal(0, 2, (256, 1024)), jnp.float32)
@@ -48,9 +51,9 @@ def main() -> None:
     us_a = timeit(lambda: act(xf).block_until_ready(), repeats=10)
     emit("kernel/ppa_apply_float", us_a, melems_per_s=f"{n / us_a:.1f}")
 
-    e2 = pack_table(get_table("exp2_frac",
-                              FWLConfig(8, 16, (8, 16), (16, 16), 16),
-                              PPAScheme(order=2, quantizer="fqa")))
+    e2 = pack_table(compile_or_load("exp2_frac",
+                                    FWLConfig(8, 16, (8, 16), (16, 16), 16),
+                                    PPAScheme(order=2, quantizer="fqa")))
     sm = jax.jit(lambda v: ppa_softmax(e2, v))
     us_s = timeit(lambda: sm(xf).block_until_ready(), repeats=10)
     sm_exact = jax.jit(lambda v: jax.nn.softmax(v, axis=-1))

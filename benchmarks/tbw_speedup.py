@@ -1,22 +1,37 @@
 """TBW acceleration (paper Sec. III-B, Eq. 8-10): candidate-evaluation and
 grid-point counts for TBW vs PLAC-bisection vs Sun-sequential, plus the
-paper's analytic first-segment speedup ratios."""
+paper's analytic first-segment speedup ratios.
+
+Also the compiler-reuse report: the memoized ``repro.compiler`` session vs
+the seed (cold) evaluator on the Table-1 sigmoid config, for the two hot
+search loops — the Fig. 7 hardware-constrained binary search and the
+Sec. III-C FWL shrink flow.  Results must be identical (asserted); the
+candidate-evaluation counts must strictly drop (asserted).
+"""
 
 from __future__ import annotations
 
-from repro.core import FWLConfig, PPAScheme, compile_ppa_table
+from repro.compiler import CompilerSession, compile_table
+from repro.core import (FWLConfig, PPAScheme, hardware_constrained_ppa,
+                        optimize_fwls)
 from benchmarks.common import emit, timeit
 
 F, S = FWLConfig, PPAScheme
 
+# Table-1 deployment point: 8-bit sigmoid, order-1 FQA
+CFG_T1 = F(8, 8, (8,), (8,), 8)
+SCHEME_T1 = S(1, None, "fqa")
 
-def main() -> None:
-    cfg = F(8, 8, (8,), (8,), 8)
+
+def segmenter_report() -> None:
     for segmenter in ("tbw", "bisection", "sequential"):
         sch = S(1, None, "fqa", segmenter=segmenter)
-        us = timeit(lambda: compile_ppa_table("sigmoid", cfg, sch),
-                    repeats=3, warmup=1)
-        tab = compile_ppa_table("sigmoid", cfg, sch)
+        # memoize=False: time the seed-equivalent cold compile
+        us = timeit(lambda: compile_table(
+            "sigmoid", CFG_T1, sch,
+            session=CompilerSession(memoize=False)), repeats=3, warmup=1)
+        tab = compile_table("sigmoid", CFG_T1, sch,
+                            session=CompilerSession(memoize=False))
         emit(f"tbw/{segmenter}", us,
              segs=tab.num_segments,
              segment_evals=int(tab.stats["segment_evals"]),
@@ -32,6 +47,52 @@ def main() -> None:
          paper="31")
     emit("tbw/eq9_left_case_speedup", 0.0, value=f"{eq9:.1f}", paper="5.6-8.4 range")
     emit("tbw/eq10_right_case_speedup", 0.0, value=f"{eq10:.1f}")
+
+
+def compiler_reuse_report() -> None:
+    """Memoized session vs seed evaluator on the two hot search loops."""
+    rows = {}
+    for name, memo in (("seed", False), ("memoized", True)):
+        sess = CompilerSession(memoize=memo)
+        us = timeit(lambda: hardware_constrained_ppa(
+            "sigmoid", CFG_T1, SCHEME_T1, seg_t=16,
+            session=CompilerSession(memoize=memo)), repeats=3, warmup=0)
+        res = hardware_constrained_ppa("sigmoid", CFG_T1, SCHEME_T1,
+                                       seg_t=16, session=sess)
+        c = sess.counters()
+        rows[name] = (res.table.num_segments, res.table.mae_hard, c)
+        emit(f"compiler/hw_constrained/{name}", us,
+             segs=res.table.num_segments,
+             mae_hard=f"{res.table.mae_hard:.6e}",
+             iterations=res.iterations,
+             cand_evals=c["cand_evals"], segment_evals=c["calls"],
+             hits=c["hits"], pruned=c["pruned"], warm_hits=c["warm_hits"])
+    assert rows["seed"][:2] == rows["memoized"][:2], "results diverged"
+    assert rows["memoized"][2]["cand_evals"] < rows["seed"][2]["cand_evals"]
+    emit("compiler/hw_constrained/speedup", 0.0,
+         cand_eval_ratio=f"{rows['seed'][2]['cand_evals'] / rows['memoized'][2]['cand_evals']:.2f}x")
+
+    rows = {}
+    for name, memo in (("seed", False), ("memoized", True)):
+        sess = CompilerSession(memoize=memo)
+        res = optimize_fwls("sigmoid", w_in=8, w_out=8, scheme=SCHEME_T1,
+                            session=sess)
+        c = sess.counters()
+        rows[name] = (res.table.num_segments, res.table.mae_hard, res.cfg, c)
+        emit(f"compiler/fwl_search/{name}", 0.0,
+             segs=res.table.num_segments,
+             mae_hard=f"{res.table.mae_hard:.6e}",
+             cand_evals=c["cand_evals"], segment_evals=c["calls"],
+             hits=c["hits"], warm_hits=c["warm_hits"])
+    assert rows["seed"][:3] == rows["memoized"][:3], "results diverged"
+    assert rows["memoized"][3]["cand_evals"] < rows["seed"][3]["cand_evals"]
+    emit("compiler/fwl_search/speedup", 0.0,
+         cand_eval_ratio=f"{rows['seed'][3]['cand_evals'] / rows['memoized'][3]['cand_evals']:.2f}x")
+
+
+def main() -> None:
+    segmenter_report()
+    compiler_reuse_report()
 
 
 if __name__ == "__main__":

@@ -2,6 +2,12 @@
 the segment capacity SEG_t; the flow finds the minimum-MAE coefficient
 set that exactly fills it — then deploys it as a model activation.
 
+The whole flow runs through the ``repro.compiler`` subsystem: one
+:class:`CompilerSession` shares every window fit across the MAE_t binary
+search (the counters below show the reuse), and the winning design point
+lands in the content-addressed store so a later deployment (or another
+process) resolves it via ``compile_or_load`` with zero segment evaluations.
+
   PYTHONPATH=src python examples/hw_constrained_workflow.py --seg-t 16
 """
 
@@ -9,6 +15,7 @@ import argparse
 
 import jax.numpy as jnp
 
+from repro.compiler import CompilerSession, default_store
 from repro.core import FWLConfig, PPAScheme, hardware_constrained_ppa
 from repro.kernels import pack_table, ppa_apply
 
@@ -23,18 +30,34 @@ def main():
 
     cfg = FWLConfig(w_in=8, w_out=8, w_a=(8,) * args.order,
                     w_o=(8,) * args.order, w_b=8)
-    res = hardware_constrained_ppa(
-        args.naf, cfg, PPAScheme(order=args.order, quantizer="fqa"),
-        seg_t=args.seg_t)
+    scheme = PPAScheme(order=args.order, quantizer="fqa")
+    session = CompilerSession()
+    res = hardware_constrained_ppa(args.naf, cfg, scheme, seg_t=args.seg_t,
+                                   session=session)
     tab = res.table
     print(f"SEG_t={args.seg_t}: converged in {res.iterations} iterations")
     path = ", ".join(f"{m[0] if isinstance(m, tuple) else m:.2e}"
                      for m in res.mae_t_path)
     print(f"  segments={tab.num_segments}  MAE_hard={tab.mae_hard:.3e}  "
           f"MAE_t path: [{path}]")
+    c = session.counters()
+    print(f"  compiler reuse: {c['calls']} window requests -> "
+          f"{c['misses']} quantizer scans ({c['hits']} cache hits, "
+          f"{c['pruned']} pruned, {c['warm_hits']} warm starts, "
+          f"{c['cand_evals']} candidate evals)")
+
+    # the winning design point is a deployment artifact: resolve it through
+    # the store (compiles once, from the already-warm session) so any later
+    # consumer loads it instead of recompiling.
+    store = default_store()
+    dep = store.compile_or_load(args.naf, cfg, scheme, mae_t=tab.mae_t,
+                                tseg=args.seg_t, session=session)
+    store.compile_or_load(args.naf, cfg, scheme, mae_t=tab.mae_t,
+                          tseg=args.seg_t)
+    print(f"  store: {store.stats()} (second resolution was a pure hit)")
 
     # compare against the unconstrained minimum-MAE design
-    tc = pack_table(tab)
+    tc = pack_table(dep)
     x = jnp.linspace(0.0, 0.999, 256)
     y = ppa_apply(tc, x)
     print(f"  deployed: max|f-h| on grid = "

@@ -1,0 +1,29 @@
+#!/usr/bin/env bash
+# One-command verify entrypoint.
+#
+#   scripts/ci.sh         tier-1: the full suite, fail-fast (the command
+#                         ROADMAP.md pins as the repo's verify gate)
+#   scripts/ci.sh fast    quick iteration subset: skip the slow paper-table
+#                         compiles and the dry-run mesh tests
+#
+# Extra args after the mode are forwarded to pytest, e.g.
+#   scripts/ci.sh fast -k compiler
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+mode="${1:-tier1}"
+[ "$#" -gt 0 ] && shift
+
+case "$mode" in
+  tier1)
+    exec python -m pytest -x -q "$@"
+    ;;
+  fast)
+    exec python -m pytest -q -m "not slow and not dryrun" "$@"
+    ;;
+  *)
+    echo "usage: scripts/ci.sh [tier1|fast] [pytest args...]" >&2
+    exit 2
+    ;;
+esac

@@ -1,0 +1,30 @@
+"""repro.compiler — the PPA table compiler subsystem.
+
+Decouples *search* (fit -> quantize -> segment, with memoized window
+evaluation) from *execution* (the packed :class:`PPATable` consumed by the
+Pallas kernels, the jnp reference ops and the serving engine).  Pieces:
+
+  * :class:`MemoizedSegmentEvaluator` — interval cache + monotone pruning +
+    warm starts over the seed ``SegmentEvaluator``.
+  * :class:`CompilerSession` / :func:`compile_table` — the one canonical
+    compile path; search loops share a session to reuse fits across
+    iterations.
+  * :class:`TableStore` / :func:`compile_or_load` — content-addressed
+    memory+disk artifact store; tables are deployment artifacts, compiled
+    once and shared by the whole stack.
+  * :func:`compile_batch` — multi-process fan-out for independent jobs.
+"""
+
+from .batch import compile_batch
+from .compile import CompilerSession, compile_table, resolve_defaults
+from .memo import MemoizedSegmentEvaluator
+from .store import (CompileJob, TableStore, cache_dir, compile_or_load,
+                    default_store, set_default_store)
+
+__all__ = [
+    "MemoizedSegmentEvaluator",
+    "CompilerSession", "compile_table", "resolve_defaults",
+    "CompileJob", "TableStore", "cache_dir", "compile_or_load",
+    "default_store", "set_default_store",
+    "compile_batch",
+]

@@ -1,0 +1,173 @@
+"""Memoized segment evaluation: the compiler's interval cache.
+
+The whole software cost of the FQA flow is repeated ``SegmentEvaluator``
+calls: TBW probes overlapping windows, the FWL shrink flow recompiles the
+full table once per candidate FWL, and the hardware-constrained workflow
+binary-searches MAE_t with a full recompile per iteration.  The seed
+evaluator forgot every fit the moment it returned; this one remembers.
+
+Cache semantics per ``(start, end)`` window:
+
+  * **complete** entries hold the quantizer's minimum achievable MAE for
+    the window (a full candidate-space scan: any "best"/"full" fit, or a
+    *failed* feasible scan — which is exhaustive by construction).  A
+    complete entry answers feasibility at *any* MAE_t with one float
+    comparison, so retargeting the evaluator (``retarget``) between binary-
+    search iterations keeps all knowledge valid.
+  * **partial** entries hold an upper bound (an early-exited feasible scan).
+    They answer "feasible?" whenever their bound already satisfies the
+    current MAE_t; anything tighter falls through to a real scan.
+
+Monotone pruning, from two lower bounds on a window's achievable MAE:
+
+  * the per-point quantization floor max|f - f_q| over the window (the
+    paper's Eq. 7 MAE_0 bound) — unconditionally sound, since any
+    datapath output lives on the w_out grid;
+  * a *same-start* contained window's known minimum: extending a window
+    rightward can only grow its best achievable MAE.  This is exactly the
+    monotonicity the seed's TBW/bisection already assume when a failed
+    probe at ``ep`` excludes every end beyond it (rp = ep-1), so pruning
+    on it is no stronger an assumption than the uncached algorithm makes.
+    Windows with *different* starts are never used: FQA candidate spaces
+    are centered on each window's own Remez fit, so cross-start
+    containment would not be a sound bound.
+
+Warm starts: the last satisfying coefficient set per segment start is
+offered to the quantizer, which verifies it *inside the window's own
+candidate space* — probes that would succeed anyway succeed after one
+candidate evaluation instead of a chunk scan, and decisions are bit-
+identical to the uncached evaluator either way.
+
+Counters distinguish logical requests from work done: ``calls`` counts
+every request (as in the seed), ``hits``/``pruned`` the requests answered
+from the cache, ``misses`` the real quantizer scans, ``warm_hits`` the
+misses resolved by the warm candidate.  ``cand_evals``/``points_touched``
+only ever grow on misses.
+"""
+
+from __future__ import annotations
+
+import bisect
+import dataclasses
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.core.datapath import FWLConfig
+from repro.core.fixed_point import round_half_away
+from repro.core.quantize import Quantizer, SegmentFit, _EPS
+from repro.core.segmentation import SegmentEvaluator
+
+__all__ = ["MemoizedSegmentEvaluator"]
+
+
+@dataclasses.dataclass
+class _Entry:
+    fit: SegmentFit
+    complete: bool    # fit.mae is the minimum over the full candidate space
+
+
+class MemoizedSegmentEvaluator(SegmentEvaluator):
+    """Drop-in :class:`SegmentEvaluator` with an interval cache.
+
+    ``enabled=False`` degrades to the exact seed behaviour (no cache, no
+    warm starts, no pruning) — used as the baseline in benchmarks.
+    """
+
+    def __init__(self, x_int: np.ndarray, f_vals: np.ndarray,
+                 cfg: FWLConfig, quantizer: Quantizer, mae_t: float,
+                 *, enabled: bool = True):
+        super().__init__(x_int, f_vals, cfg, quantizer, mae_t)
+        self.enabled = enabled
+        self.hits = 0
+        self.misses = 0
+        self.pruned = 0
+        self.warm_hits = 0
+        self._cache: Dict[Tuple[int, int], _Entry] = {}
+        # per-start frontier of complete fits: (ends sorted asc, running-max
+        # achievable MAE per end) — the containment lower bound.
+        self._frontier: Dict[int, Tuple[List[int], List[float]]] = {}
+        self._warm: Dict[int, Tuple[int, ...]] = {}
+        f_q = round_half_away(self.f_vals * (1 << cfg.w_out)) \
+            / (1 << cfg.w_out)
+        self._qerr = np.abs(self.f_vals - f_q)
+
+    # -- retargeting -----------------------------------------------------------
+    def retarget(self, mae_t: float) -> None:
+        """Change MAE_t without dropping cached fits (they are MAE_t-free
+        facts about windows; only the ``ok`` verdict moves)."""
+        self.mae_t = float(mae_t)
+
+    # -- cache bookkeeping -----------------------------------------------------
+    def _at_target(self, fit: SegmentFit) -> SegmentFit:
+        return dataclasses.replace(
+            fit, ok=bool(fit.mae <= self.mae_t + _EPS), evals=0,
+            warm_hit=False)
+
+    def _frontier_add(self, start: int, end: int, mae: float) -> None:
+        ends, maes = self._frontier.setdefault(start, ([], []))
+        i = bisect.bisect_left(ends, end)
+        if i < len(ends) and ends[i] == end:
+            maes[i] = max(maes[i], mae)
+        else:
+            ends.insert(i, end)
+            maes.insert(i, mae)
+        for j in range(max(i, 1), len(ends)):   # keep the running max
+            if maes[j] < maes[j - 1]:
+                maes[j] = maes[j - 1]
+
+    def lower_bound(self, start: int, end: int) -> float:
+        """Lower bound on the best achievable MAE of [start, end]: the
+        window's quantization floor, and the best MAE of any *same-start*
+        prefix window already scanned completely (see module docstring for
+        why other starts are excluded)."""
+        lb = float(self._qerr[start: end + 1].max())
+        frontier = self._frontier.get(start)
+        if frontier is not None:
+            ends, maes = frontier
+            i = bisect.bisect_right(ends, end) - 1
+            if i >= 0 and maes[i] > lb:
+                lb = maes[i]
+        return lb
+
+    # -- the evaluator entrypoint ----------------------------------------------
+    def evaluate(self, start: int, end: int, mode: str = "feasible"
+                 ) -> SegmentFit:
+        if not self.enabled:
+            return super().evaluate(start, end, mode)
+        self.calls += 1
+        key = (start, end)
+        ent = self._cache.get(key)
+        if ent is not None and mode != "full":
+            if ent.complete or (mode == "feasible"
+                                and ent.fit.mae <= self.mae_t + _EPS):
+                self.hits += 1
+                return self._at_target(ent.fit)
+        if mode == "feasible":
+            lb = self.lower_bound(start, end)
+            if lb > self.mae_t + _EPS:
+                self.pruned += 1
+                return SegmentFit(
+                    ok=False, mae=float(lb),
+                    a_int=tuple(0 for _ in range(self.cfg.order)), b_int=0)
+
+        self.misses += 1
+        self.points_touched += end - start + 1
+        warm = self._warm.get(start) if mode == "feasible" else None
+        fit = self.quantizer.fit_segment(
+            self.x_int[start: end + 1], self.f_vals[start: end + 1],
+            self.cfg, self.mae_t, mode=mode, a_warm=warm)
+        self.cand_evals += fit.evals
+        if fit.warm_hit:
+            self.warm_hits += 1
+        if fit.ok:
+            self._warm[start] = fit.a_int
+        # a feasible-mode scan that found nothing is exhaustive -> complete
+        complete = mode != "feasible" or not fit.ok
+        if ent is None or complete:
+            self._cache[key] = _Entry(fit, complete)
+            if complete:
+                self._frontier_add(start, end, fit.mae)
+        elif fit.mae < ent.fit.mae:
+            self._cache[key] = _Entry(fit, False)   # tighter upper bound
+        return fit

@@ -1,0 +1,202 @@
+"""Content-addressed cross-compile table store.
+
+A compiled :class:`~repro.core.schemes.PPATable` is a deployment artifact —
+the reconfigurable-unit view of Flex-SFU/GRAU — not a throwaway search
+result.  The store makes it first-class: tables are addressed by the full
+compile request (naf x interval x FWLConfig x PPAScheme x mae_t/tseg),
+kept in an in-memory tier for the process and a JSON-on-disk tier (reusing
+``PPATable.to_json``) shared across processes, benchmarks, tests and the
+serving engine.
+
+``compile_or_load`` is the one entrypoint consumers use: a memory hit costs
+a dict lookup, a disk hit costs one JSON parse, and only a full miss runs
+the compiler — with zero segment evaluations on any hit (asserted by
+tests/test_compiler.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+from pathlib import Path
+from typing import Dict, Optional, Tuple
+
+from repro.core.datapath import FWLConfig
+from repro.core.schemes import PPAScheme, PPATable
+
+from .compile import CompilerSession, compile_table, resolve_defaults
+
+__all__ = ["CompileJob", "TableStore", "cache_dir", "default_store",
+           "set_default_store", "compile_or_load"]
+
+
+def cache_dir() -> Path:
+    """Root of the on-disk tier (REPRO_TABLE_CACHE overrides)."""
+    d = os.environ.get("REPRO_TABLE_CACHE")
+    if d:
+        p = Path(d)
+    else:
+        p = Path(__file__).resolve().parents[3] / "artifacts" / "ppa_tables"
+    p.mkdir(parents=True, exist_ok=True)
+    return p
+
+
+@dataclasses.dataclass(frozen=True)
+class CompileJob:
+    """One independent compile request — the store's addressing unit."""
+
+    naf: str
+    cfg: FWLConfig
+    scheme: PPAScheme = PPAScheme()
+    mae_t: Optional[float] = None
+    interval: Optional[Tuple[float, float]] = None
+    tseg: Optional[int] = None
+    final_mode: str = "best"
+
+    def resolved(self) -> "CompileJob":
+        """Fill in the defaults the compiler would use (one shared
+        resolver, compile.resolve_defaults), so equivalent requests share
+        one address and a key always describes the actual compile."""
+        spec, interval, mae_t = resolve_defaults(
+            self.naf, self.cfg, self.mae_t, self.interval)
+        if (self.naf, self.interval, self.mae_t) == (spec.name, interval,
+                                                     mae_t):
+            return self     # already resolved (idempotent, no realloc)
+        return dataclasses.replace(self, naf=spec.name, interval=interval,
+                                   mae_t=mae_t)
+
+    def key(self) -> str:
+        job = self.resolved()
+        blob = json.dumps({
+            "naf": job.naf, "cfg": job.cfg.as_dict(),
+            "scheme": dataclasses.asdict(job.scheme),
+            "mae_t": job.mae_t, "interval": list(job.interval),
+            "tseg": job.tseg, "final_mode": job.final_mode, "v": 3,
+        }, sort_keys=True)
+        return hashlib.sha1(blob.encode()).hexdigest()[:16]
+
+    def compile(self, session: Optional[CompilerSession] = None) -> PPATable:
+        job = self.resolved()   # compile exactly what the key describes
+        return compile_table(job.naf, job.cfg, job.scheme,
+                             mae_t=job.mae_t, interval=job.interval,
+                             tseg=job.tseg, final_mode=job.final_mode,
+                             session=session)
+
+
+class TableStore:
+    """Two-tier (memory + JSON disk) content-addressed PPATable store."""
+
+    def __init__(self, root: "Optional[str | Path]" = None,
+                 *, persist: bool = True):
+        self._root = Path(root) if root is not None else None
+        self.persist = persist
+        self._mem: Dict[str, PPATable] = {}
+        self.hits_mem = 0
+        self.hits_disk = 0
+        self.misses = 0
+
+    @property
+    def root(self) -> Path:
+        if self._root is None:
+            self._root = cache_dir()
+        self._root.mkdir(parents=True, exist_ok=True)
+        return self._root
+
+    def _path(self, job: CompileJob, key: str) -> Path:
+        return self.root / f"{job.naf}-{job.scheme.tag}-{key}.json"
+
+    # -- tiers -----------------------------------------------------------------
+    def _lookup(self, job: CompileJob, key: str) -> Optional[PPATable]:
+        """Memory then disk for an already-resolved job; no compile."""
+        tab = self._mem.get(key)
+        if tab is not None:
+            self.hits_mem += 1
+            return tab
+        if self.persist:
+            path = self._path(job, key)
+            if path.exists():
+                try:
+                    tab = PPATable.load(path)
+                except Exception:
+                    path.unlink(missing_ok=True)
+                else:
+                    self.hits_disk += 1
+                    self._mem[key] = tab
+                    return tab
+        return None
+
+    def _put(self, job: CompileJob, key: str, table: PPATable) -> None:
+        self._mem[key] = table
+        if self.persist:
+            path = self._path(job, key)
+            tmp = path.with_suffix(f".{os.getpid()}.tmp")
+            tmp.write_text(table.to_json())
+            os.replace(tmp, path)  # atomic
+
+    def lookup(self, job: CompileJob) -> Optional[PPATable]:
+        """Memory then disk; None on a full miss (no compile)."""
+        job = job.resolved()
+        return self._lookup(job, job.key())
+
+    def put(self, job: CompileJob, table: PPATable) -> None:
+        job = job.resolved()
+        self._put(job, job.key(), table)
+
+    # -- the entrypoint --------------------------------------------------------
+    def compile_or_load(self, naf: str, cfg: FWLConfig,
+                        scheme: PPAScheme = PPAScheme(), *,
+                        mae_t: Optional[float] = None,
+                        interval: Optional[Tuple[float, float]] = None,
+                        tseg: Optional[int] = None,
+                        final_mode: str = "best",
+                        session: Optional[CompilerSession] = None
+                        ) -> PPATable:
+        job = CompileJob(naf=naf, cfg=cfg, scheme=scheme, mae_t=mae_t,
+                         interval=interval, tseg=tseg,
+                         final_mode=final_mode).resolved()
+        key = job.key()
+        tab = self._lookup(job, key)
+        if tab is not None:
+            return tab
+        self.misses += 1
+        tab = job.compile(session)
+        self._put(job, key, tab)
+        return tab
+
+    def stats(self) -> Dict[str, int]:
+        return {"hits_mem": self.hits_mem, "hits_disk": self.hits_disk,
+                "misses": self.misses, "in_memory": len(self._mem)}
+
+
+_DEFAULT: Optional[TableStore] = None
+
+
+def default_store() -> TableStore:
+    """The process-wide store every inline consumer (models, serving,
+    benchmarks) resolves tables through."""
+    global _DEFAULT
+    if _DEFAULT is None:
+        _DEFAULT = TableStore()
+    return _DEFAULT
+
+
+def set_default_store(store: Optional[TableStore]) -> Optional[TableStore]:
+    """Swap the process-wide store (e.g. the serving engine pinning its own
+    artifact directory).  Returns the previous store."""
+    global _DEFAULT
+    prev, _DEFAULT = _DEFAULT, store
+    return prev
+
+
+def compile_or_load(naf: str, cfg: FWLConfig, scheme: PPAScheme = PPAScheme(),
+                    *, mae_t: Optional[float] = None,
+                    interval: Optional[Tuple[float, float]] = None,
+                    tseg: Optional[int] = None, final_mode: str = "best",
+                    store: Optional[TableStore] = None,
+                    session: Optional[CompilerSession] = None) -> PPATable:
+    """Module-level convenience over :meth:`TableStore.compile_or_load`."""
+    return (store or default_store()).compile_or_load(
+        naf, cfg, scheme, mae_t=mae_t, interval=interval, tseg=tseg,
+        final_mode=final_mode, session=session)

@@ -17,7 +17,7 @@ from .remez import fit_minimax, horner
 from .schemes import (PPAScheme, PPATable, compile_ppa_table, eval_table_int,
                       table_mae_report)
 from .segmentation import (Segment, SegmentEvaluator, bisection_segment,
-                           sequential_segment, tbw_segment)
+                           estimate_tseg, sequential_segment, tbw_segment)
 from .workflow import WorkflowResult, hardware_constrained_ppa
 
 __all__ = [
@@ -33,7 +33,7 @@ __all__ = [
     "fit_minimax", "horner",
     "PPAScheme", "PPATable", "compile_ppa_table", "eval_table_int",
     "table_mae_report",
-    "Segment", "SegmentEvaluator", "bisection_segment", "sequential_segment",
-    "tbw_segment",
+    "Segment", "SegmentEvaluator", "bisection_segment", "estimate_tseg",
+    "sequential_segment", "tbw_segment",
     "WorkflowResult", "hardware_constrained_ppa",
 ]

@@ -42,14 +42,22 @@ def optimize_fwls(
     search_quantizer: str = "fqa_fast",
     min_fwl: int = 2,
     compile_kwargs: Optional[dict] = None,
+    session=None,
 ) -> FWLSearchResult:
     """Run the paper's Step 1-3 FWL flow and return the winning config.
 
     The shrink loop uses the cheaper ``fqa_fast`` search (base d-range);
     the final returned table is recompiled with the scheme's own quantizer.
+    Every candidate compile runs on one shared
+    :class:`repro.compiler.CompilerSession`.  Window fits are FWL-config-
+    dependent, so the savings come from *within* each candidate compile
+    (warm-started probes, cached finalize fits) rather than across them;
+    cross-config sharing is future work (see ROADMAP "Open items").
     """
+    from repro.compiler import CompilerSession
     n = scheme.order
     compile_kwargs = compile_kwargs or {}
+    session = session or CompilerSession()
     # Step 1: initialization
     big = max(w_in, w_out)
     cfg = FWLConfig(w_in=w_in, w_out=w_out,
@@ -59,7 +67,7 @@ def optimize_fwls(
 
     def compile_cfg(c: FWLConfig) -> PPATable:
         return compile_ppa_table(naf, c, search_scheme, mae_t=mae_t,
-                                 **compile_kwargs)
+                                 session=session, **compile_kwargs)
 
     history: List[Tuple[str, FWLConfig, int, float]] = []
     table = compile_cfg(cfg)
@@ -101,5 +109,6 @@ def optimize_fwls(
     shrink("w_b", None, "w_b")
 
     # final compile with the real quantizer
-    final = compile_ppa_table(naf, cfg, scheme, mae_t=mae_t, **compile_kwargs)
+    final = compile_ppa_table(naf, cfg, scheme, mae_t=mae_t, session=session,
+                              **compile_kwargs)
     return FWLSearchResult(cfg=cfg, table=final, history=history)

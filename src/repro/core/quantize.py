@@ -54,6 +54,7 @@ class SegmentFit:
     a_candidates: Optional[np.ndarray] = None  # (K, n) satisfying sets
     b_candidates: Optional[np.ndarray] = None  # (K,)
     evals: int = 0                # candidate evaluations performed
+    warm_hit: bool = False        # satisfied by the warm-start candidate
 
 
 class Quantizer:
@@ -82,6 +83,7 @@ class Quantizer:
         mae_t: float,
         mode: str = "feasible",
         a_real: Optional[np.ndarray] = None,
+        a_warm: Optional[Tuple[int, ...]] = None,
     ) -> SegmentFit:
         """Quantize one segment.
 
@@ -93,6 +95,11 @@ class Quantizer:
                 "best" (full scan, return argmin) or
                 "full" (also collect all satisfying candidate sets).
           a_real: optional pre-quantization coefficients (skips Remez).
+          a_warm: optional warm-start coefficient set (feasible mode only).
+            If it lies inside this segment's candidate space and satisfies
+            mae_t it is returned after a single evaluation; otherwise the
+            normal scan runs.  Feasibility decisions are unchanged either
+            way — a warm hit just proves existence with one eval.
         """
         n = cfg.order
         G = x_int.size
@@ -110,11 +117,48 @@ class Quantizer:
         f_q = round_half_away(f_vals * (1 << cfg.w_out)).astype(np.float64) \
             / (1 << cfg.w_out)
 
+        def eval_block(a_list):
+            """Evaluate K candidate sets -> (mae (K,), b_int (K,), y (K,G))."""
+            nonlocal b_real
+            K = a_list[0].size
+            _, (hp, w_pre) = _horner_pre_b(a_list, x_int, cfg)
+            if self.flatten_b:
+                # error-flatten the intercept per candidate (Alg.1 lines 7-9)
+                e0 = f_vals[None, :] - hp.astype(np.float64) / (1 << w_pre)
+                b = 0.5 * (e0.max(axis=-1) + e0.min(axis=-1))
+                b_int = round_half_away(b * (1 << cfg.w_b))
+            else:
+                if b_real is None:
+                    x_f = x_int.astype(np.float64) / (1 << cfg.w_in)
+                    _, b_real = fit_minimax(x_f, f_vals, degree=n)
+                b_int = np.full(K, round_half_away(b_real * (1 << cfg.w_b)),
+                                dtype=np.int64)
+            out, w_sum = concat_add(hp, w_pre, b_int[:, None], cfg.w_b)
+            out = trunc_shift(out, w_sum - cfg.w_out)
+            y = out.astype(np.float64) / (1 << cfg.w_out)
+            return np.abs(f_vals[None, :] - y).max(axis=-1), b_int, y
+
+        evals = 0
+
+        # warm start: a candidate that was good for an overlapping window is
+        # usually still good here; it must lie inside *this* segment's
+        # candidate space so feasibility semantics stay identical.
+        if (a_warm is not None and mode == "feasible" and len(a_warm) == n
+                and all((cands[i] == int(a_warm[i])).any() for i in range(n))):
+            a_list = [np.asarray([int(v)], dtype=np.int64) for v in a_warm]
+            mae_w, b_w, y_w = eval_block(a_list)
+            evals += 1
+            if mae_w[0] <= mae_t + _EPS:
+                return SegmentFit(
+                    ok=True, mae=float(mae_w[0]),
+                    a_int=tuple(int(v) for v in a_warm), b_int=int(b_w[0]),
+                    mae0=float(np.abs(f_q - y_w[0]).max()),
+                    n_satisfying=1, evals=evals, warm_hit=True)
+
         best = SegmentFit(False, np.inf, tuple(0 for _ in range(n)), 0)
         sat_a: List[np.ndarray] = []
         sat_b: List[np.ndarray] = []
         n_sat = 0
-        evals = 0
 
         # chunk over the first-stage candidates; later stages broadcast.
         first = cands[0]
@@ -133,23 +177,7 @@ class Quantizer:
             K = C * R
             evals += K
 
-            h_pre, (hp, w_pre) = _horner_pre_b(a_list, x_int, cfg)
-            if self.flatten_b:
-                # error-flatten the intercept per candidate (Alg.1 lines 7-9)
-                e0 = f_vals[None, :] - hp.astype(np.float64) / (1 << w_pre)
-                b = 0.5 * (e0.max(axis=-1) + e0.min(axis=-1))
-                b_int = round_half_away(b * (1 << cfg.w_b))
-            else:
-                if b_real is None:
-                    x_f = x_int.astype(np.float64) / (1 << cfg.w_in)
-                    _, b_real = fit_minimax(x_f, f_vals, degree=n)
-                b_int = np.full(K, round_half_away(b_real * (1 << cfg.w_b)),
-                                dtype=np.int64)
-            out, w_sum = concat_add(hp, w_pre, b_int[:, None], cfg.w_b)
-            out = trunc_shift(out, w_sum - cfg.w_out)
-            y = out.astype(np.float64) / (1 << cfg.w_out)
-            err = np.abs(f_vals[None, :] - y)
-            mae = err.max(axis=-1)                    # (K,)
+            mae, b_int, y = eval_block(a_list)
 
             k = int(np.argmin(mae))
             if mae[k] < best.mae:

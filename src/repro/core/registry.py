@@ -1,21 +1,24 @@
-"""Compiled-table registry: content-addressed disk cache for PPATables.
+"""Compiled-table registry: the legacy façade over the table store.
 
 Model configs reference activations by (naf, scheme, fwl) key; compiling
 an FQA table takes seconds-to-minutes, so tables are cached under
 ``REPRO_TABLE_CACHE`` (default: <repo>/artifacts/ppa_tables) and shared by
 tests, benchmarks, examples and the serving engine.
+
+The actual caching now lives in :mod:`repro.compiler.store` (content-
+addressed memory + disk tiers); ``get_table`` and ``cache_dir`` remain as
+thin wrappers so seed-era call sites keep working.
 """
 
 from __future__ import annotations
 
 import hashlib
 import json
-import os
 from pathlib import Path
 from typing import Optional, Tuple
 
 from .datapath import FWLConfig
-from .schemes import PPAScheme, PPATable, compile_ppa_table
+from .schemes import PPAScheme, PPATable
 
 __all__ = ["table_key", "get_table", "cache_dir", "DEFAULT_SCHEMES"]
 
@@ -30,18 +33,15 @@ DEFAULT_SCHEMES = {
 
 
 def cache_dir() -> Path:
-    d = os.environ.get("REPRO_TABLE_CACHE")
-    if d:
-        p = Path(d)
-    else:
-        p = Path(__file__).resolve().parents[3] / "artifacts" / "ppa_tables"
-    p.mkdir(parents=True, exist_ok=True)
-    return p
+    from repro.compiler import cache_dir as _cache_dir
+    return _cache_dir()
 
 
 def table_key(naf: str, cfg: FWLConfig, scheme: PPAScheme,
               mae_t: Optional[float], interval: Optional[Tuple[float, float]]
               ) -> str:
+    """Legacy (v2) addressing, kept for external references; the store keys
+    on the full compile request (see repro.compiler.CompileJob.key)."""
     blob = json.dumps({
         "naf": naf, "cfg": cfg.as_dict(),
         "scheme": [scheme.order, scheme.m_shifters, scheme.quantizer,
@@ -55,16 +55,8 @@ def get_table(naf: str, cfg: FWLConfig, scheme: PPAScheme = PPAScheme(),
               *, mae_t: Optional[float] = None,
               interval: Optional[Tuple[float, float]] = None,
               use_cache: bool = True) -> PPATable:
-    key = table_key(naf, cfg, scheme, mae_t, interval)
-    path = cache_dir() / f"{naf}-{scheme.tag}-{key}.json"
-    if use_cache and path.exists():
-        try:
-            return PPATable.load(path)
-        except Exception:
-            path.unlink(missing_ok=True)
-    tab = compile_ppa_table(naf, cfg, scheme, mae_t=mae_t, interval=interval)
-    if use_cache:
-        tmp = path.with_suffix(".tmp")
-        tmp.write_text(tab.to_json())
-        os.replace(tmp, path)  # atomic
-    return tab
+    from repro.compiler import compile_table, default_store
+    if not use_cache:
+        return compile_table(naf, cfg, scheme, mae_t=mae_t, interval=interval)
+    return default_store().compile_or_load(naf, cfg, scheme, mae_t=mae_t,
+                                           interval=interval)

@@ -10,9 +10,8 @@ from __future__ import annotations
 
 import dataclasses
 import json
-import math
 from pathlib import Path
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import numpy as np
 
@@ -20,9 +19,7 @@ from .datapath import FWLConfig, horner_fixed
 from .fixed_point import (grid_for_interval, hamming_weight,
                           min_signed_digits, round_half_away)
 from .functions import NAFSpec, get_naf
-from .quantize import (FQAQuantizer, Quantizer, make_quantizer)
-from .segmentation import (Segment, SegmentEvaluator, bisection_segment,
-                           sequential_segment, tbw_segment)
+from .quantize import Quantizer, make_quantizer
 
 __all__ = ["PPAScheme", "PPATable", "compile_ppa_table", "eval_table_int",
            "table_mae_report"]
@@ -129,66 +126,19 @@ def compile_ppa_table(
     interval: Optional[Tuple[float, float]] = None,
     tseg: Optional[int] = None,
     final_mode: str = "best",
+    session=None,
 ) -> PPATable:
     """Run fit -> quantize -> segment for one NAF and pack the table.
 
-    mae_t defaults to the half-ULP quantization floor 2^-(w_out+1) — the
-    paper's "minimum achievable value for the current precision".
+    Thin wrapper over the canonical compile path,
+    :func:`repro.compiler.compile_table` (kept here for API stability —
+    every seed-era call site keeps working).  ``session`` optionally shares
+    a :class:`repro.compiler.CompilerSession` so repeated compiles reuse
+    memoized window fits; see repro/compiler/compile.py for the semantics.
     """
-    spec = get_naf(naf) if isinstance(naf, str) else naf
-    interval = interval or spec.interval
-    if mae_t is None:
-        mae_t = 0.5 ** (cfg.w_out + 1)
-
-    x_int = grid_for_interval(interval[0], interval[1], cfg.w_in)
-    f_vals = spec(x_int.astype(np.float64) / (1 << cfg.w_in))
-    quant = scheme.build_quantizer()
-    ev = SegmentEvaluator(x_int, f_vals, cfg, quant, mae_t)
-
-    if scheme.segmenter == "tbw":
-        if tseg is None:
-            # paper step 1: reference run with the search disabled (d=0)
-            ref_q = make_quantizer("plac")
-            ev_ref = SegmentEvaluator(x_int, f_vals, cfg, ref_q, mae_t)
-            try:
-                seg_ref = len(bisection_segment(ev_ref, final_mode="feasible"))
-            except RuntimeError:
-                seg_ref = max(4, x_int.size // 8)  # d=0 infeasible somewhere
-            tseg = 1 << max(0, int(round(math.log2(max(1, seg_ref)))))
-        segments = tbw_segment(ev, tseg, final_mode=final_mode)
-    elif scheme.segmenter == "bisection":
-        segments = bisection_segment(ev, final_mode=final_mode)
-    elif scheme.segmenter == "sequential":
-        segments = sequential_segment(ev, final_mode=final_mode)
-    else:
-        raise ValueError(f"unknown segmenter {scheme.segmenter!r}")
-
-    starts = np.array([x_int[s.start] for s in segments], dtype=np.int64)
-    a = np.array([s.fit.a_int for s in segments], dtype=np.int64)
-    b = np.array([s.fit.b_int for s in segments], dtype=np.int64)
-    mae_hard = max(s.fit.mae for s in segments)
-
-    f_q = round_half_away(f_vals * (1 << cfg.w_out)) / (1 << cfg.w_out)
-    table = PPATable(
-        naf=spec.name, interval=tuple(interval), cfg=cfg, scheme=scheme,
-        starts_int=starts, a_int=a, b_int=b,
-        mae_hard=float(mae_hard), mae_t=float(mae_t),
-        stats={
-            "mae_q": float(np.abs(f_q - f_vals).max()),
-            "mae0": float(max(s.fit.mae0 for s in segments)),
-            "segment_evals": ev.calls,
-            "candidate_evals": ev.cand_evals,
-            "points_touched": ev.points_touched,
-            "tseg": float(tseg or 0),
-        })
-    # cross-check: golden re-evaluation of the packed table
-    y = eval_table_int(table, x_int)
-    re_mae = float(np.abs(f_vals - y / (1 << cfg.w_out)).max())
-    table.stats["mae_recheck"] = re_mae
-    if re_mae > mae_hard + 1e-12:
-        raise AssertionError(
-            f"packed-table MAE {re_mae} exceeds per-segment MAE {mae_hard}")
-    return table
+    from repro.compiler import compile_table
+    return compile_table(naf, cfg, scheme, mae_t=mae_t, interval=interval,
+                         tseg=tseg, final_mode=final_mode, session=session)
 
 
 def eval_table_int(table: PPATable, x_int: np.ndarray) -> np.ndarray:

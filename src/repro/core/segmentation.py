@@ -18,7 +18,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Callable, List, Optional, Tuple
+from typing import List, Optional, Tuple
 
 import numpy as np
 
@@ -178,14 +178,23 @@ def sequential_segment(ev: SegmentEvaluator,
     return segments
 
 
-def estimate_tseg(ev_factory: Callable[[Quantizer], SegmentEvaluator],
-                  reference_quantizer: Quantizer) -> Tuple[int, int]:
-    """Paper step 1: segment count with d=0 (reference quantizer) bounds
-    the target; tSEG = 2^round(log2(SEG_ref)) clamped to >= 1.
+def estimate_tseg(ev: SegmentEvaluator,
+                  final_mode: str = "feasible") -> Tuple[int, int]:
+    """Paper step 1: the segment count of a reference run with the search
+    disabled (d=0, i.e. a plain-rounding quantizer behind ``ev``) bounds the
+    target; tSEG = 2^round(log2(SEG_ref)) clamped to >= 1.
+
+    This is the one shared implementation of the reference-run heuristic —
+    both the compiler (repro.compiler.compile_table) and callers that want
+    the estimate directly go through it.  If MAE_t is unreachable for the
+    reference quantizer somewhere on the grid, the d=0 run has no valid
+    segmentation; fall back to a dense-but-bounded target.
 
     Returns (tseg, seg_ref).
     """
-    ev = ev_factory(reference_quantizer)
-    seg_ref = len(bisection_segment(ev, final_mode="best"))
+    try:
+        seg_ref = len(bisection_segment(ev, final_mode=final_mode))
+    except RuntimeError:
+        seg_ref = max(4, ev.num // 8)  # d=0 infeasible somewhere
     tseg = 1 << max(0, int(round(math.log2(max(1, seg_ref)))))
     return tseg, seg_ref

@@ -39,14 +39,22 @@ def hardware_constrained_ppa(
     eps: float = 1e-9,
     max_iter: int = 40,
     interval: Optional[Tuple[float, float]] = None,
+    session=None,
 ) -> WorkflowResult:
     """Maximize precision under a fixed hardware segment budget.
 
     Returns the lowest-MAE table with num_segments <= seg_t found by the
     Fig. 7 flow.  The quantization floor MAE_q lower-bounds the search.
+
+    All binary-search iterations compile on one shared
+    :class:`repro.compiler.CompilerSession`: every window fit is a MAE_t-
+    independent fact, so iteration k answers most of iteration k+1's probes
+    from the interval cache instead of re-running the quantizer.
     """
+    from repro.compiler import CompilerSession
     spec = get_naf(naf)
     interval = interval or spec.interval
+    session = session or CompilerSession()
     x_int = grid_for_interval(interval[0], interval[1], cfg.w_in)
     f = spec(x_int.astype(np.float64) / (1 << cfg.w_in))
     f_q = round_half_away(f * (1 << cfg.w_out)) / (1 << cfg.w_out)
@@ -61,7 +69,8 @@ def hardware_constrained_ppa(
         mid = 0.5 * (lo + hi)
         try:
             tab = compile_ppa_table(naf, cfg, scheme, mae_t=mid,
-                                    interval=interval, tseg=seg_t)
+                                    interval=interval, tseg=seg_t,
+                                    session=session)
             segs = tab.num_segments
         except RuntimeError:
             segs = None  # infeasible at this MAE_t

@@ -5,10 +5,10 @@ integer equality)."""
 
 from .ops import (TableConsts, make_ppa_fn, pack_table, ppa_act, ppa_apply,
                   ppa_softmax)
-from .ppa import ppa_eval_2d
+from .ppa import ppa_eval_2d, ppa_eval_table, table_kernel_args
 from .ref import ppa_eval_ref
 from .softmax_ppa import softmax_ppa_2d
 
 __all__ = ["TableConsts", "make_ppa_fn", "pack_table", "ppa_act",
-           "ppa_apply", "ppa_softmax", "ppa_eval_2d", "ppa_eval_ref",
-           "softmax_ppa_2d"]
+           "ppa_apply", "ppa_softmax", "ppa_eval_2d", "ppa_eval_table",
+           "ppa_eval_ref", "softmax_ppa_2d", "table_kernel_args"]

@@ -22,11 +22,15 @@ far below the ~16 MiB v5e VMEM budget, leaving room for double buffering.
 from __future__ import annotations
 
 import functools
-from typing import Sequence, Tuple
+from typing import TYPE_CHECKING, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
+
+if TYPE_CHECKING:  # avoid a module-level kernels -> core import edge
+    from repro.core.schemes import PPATable
 
 DEFAULT_BLOCK = (256, 128)
 
@@ -130,3 +134,48 @@ def ppa_eval_2d(
         interpret=interpret,
     )(x_int.astype(jnp.int32), starts.astype(jnp.int32),
       coefs.astype(jnp.int32))
+
+
+def table_kernel_args(table: "PPATable"):
+    """Derive the kernel operands straight from a compiled table artifact:
+    (starts, coefs, fwl_kwargs)."""
+    cfg = table.cfg
+    starts = jnp.asarray(np.asarray(table.starts_int), jnp.int32)
+    coefs = jnp.asarray(
+        np.concatenate([np.asarray(table.a_int),
+                        np.asarray(table.b_int)[:, None]], axis=1), jnp.int32)
+    kw = dict(w_in=cfg.w_in, w_out=cfg.w_out, w_a=tuple(cfg.w_a),
+              w_o=tuple(cfg.w_o), w_b=cfg.w_b, round_mults=cfg.round_mults)
+    return starts, coefs, kw
+
+
+def ppa_eval_table(
+    table: "PPATable",
+    x_int: jax.Array,
+    *,
+    block: Tuple[int, int] = DEFAULT_BLOCK,
+    interpret: bool = True,
+) -> jax.Array:
+    """Evaluate a :class:`PPATable` artifact on integer inputs of any shape.
+
+    The adapter between the store's artifact and the Pallas kernel: segment
+    starts, the coefficient ROM and every FWL shift constant are derived
+    from the table, and the input is flattened + zero-padded to the tile
+    grid (padding lanes are evaluated and discarded).  Bit-identical to the
+    numpy golden model ``core.schemes.eval_table_int``.
+    """
+    starts, coefs, kw = table_kernel_args(table)
+    x = jnp.asarray(x_int, jnp.int32)
+    shape = x.shape
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    bm, bn = 8, block[1]
+    pad = (-n) % (bm * bn)
+    flat = jnp.pad(flat, (0, pad))
+    x2 = flat.reshape(-1, bn)
+    rows = x2.shape[0]
+    while bm < block[0] and rows % (bm * 2) == 0:  # grow rows while divisible
+        bm *= 2
+    out = ppa_eval_2d(x2, starts, coefs, block=(bm, bn),
+                      interpret=interpret, **kw)
+    return out.reshape(-1)[:n].reshape(shape)

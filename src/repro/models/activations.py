@@ -24,8 +24,8 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.compiler import compile_or_load
 from repro.core import FWLConfig, PPAScheme
-from repro.core.registry import get_table
 from repro.kernels.ops import TableConsts, pack_table, ppa_act, ppa_softmax
 
 __all__ = ["ActBundle", "make_acts"]
@@ -71,20 +71,26 @@ _SCHEME8 = PPAScheme(order=1, m_shifters=4, quantizer="fqa")
 
 
 @functools.lru_cache(maxsize=None)
-def _tc(naf: str, bits: int) -> TableConsts:
+def _tc(naf: str, bits: int, store) -> TableConsts:
     cfg, scheme = (_CFG16, _SCHEME16) if bits == 16 else (_CFG8, _SCHEME8)
     # wide-domain tables keep the fractional in-grid at w_in bits; the
     # integer span of the interval only widens the comparator range.
-    return pack_table(get_table(naf, cfg, scheme))
+    # Resolution goes through the table store (memory -> disk -> compile):
+    # model construction never compiles a table another consumer already
+    # has, and a served model's tables are plain JSON artifacts on disk.
+    # ``store`` is a concrete TableStore (identity-hashed cache key) —
+    # make_acts resolves the process default before the cache, so bundles
+    # are cached per concrete store, never per "whatever default was".
+    return pack_table(compile_or_load(naf, cfg, scheme, store=store))
 
 
-def _ppa_bundle(bits: int, backend: str) -> ActBundle:
-    sig = _tc("sigmoid_wide", bits)
-    tnh = _tc("tanh_wide", bits)
-    phi = _tc("gelu_inner", bits)
-    sp = _tc("softplus", bits)
-    en = _tc("exp_neg", bits)
-    e2 = _tc("exp2_frac", bits)
+def _ppa_bundle(bits: int, backend: str, store=None) -> ActBundle:
+    sig = _tc("sigmoid_wide", bits, store)
+    tnh = _tc("tanh_wide", bits, store)
+    phi = _tc("gelu_inner", bits, store)
+    sp = _tc("softplus", bits, store)
+    en = _tc("exp_neg", bits, store)
+    e2 = _tc("exp2_frac", bits, store)
 
     def sigmoid(x):
         return ppa_act(sig, x, backend)
@@ -113,11 +119,24 @@ def _ppa_bundle(bits: int, backend: str) -> ActBundle:
 
 
 @functools.lru_cache(maxsize=None)
-def make_acts(impl: str = "exact", backend: str = "ref") -> ActBundle:
+def _cached_bundle(impl: str, backend: str, store) -> ActBundle:
     if impl == "exact":
         return _exact_bundle()
     if impl in ("ppa", "ppa16"):
-        return _ppa_bundle(16, backend)
+        return _ppa_bundle(16, backend, store)
     if impl == "ppa8":
-        return _ppa_bundle(8, backend)
+        return _ppa_bundle(8, backend, store)
     raise ValueError(f"unknown activation impl {impl!r}")
+
+
+def make_acts(impl: str = "exact", backend: str = "ref",
+              store=None) -> ActBundle:
+    """``store``: optional :class:`repro.compiler.TableStore` the PPA
+    tables resolve through.  None resolves the *current* process default
+    at every call (so ``set_default_store`` takes effect for later
+    bundles); the concrete store is part of the bundle cache key, so
+    consumers pinning different stores get distinct bundles."""
+    if store is None and impl != "exact":
+        from repro.compiler import default_store
+        store = default_store()
+    return _cached_bundle(impl, backend, store)

@@ -85,8 +85,10 @@ def _norm(cfg: ModelCfg, x, params):
     return rmsnorm(x, params) if cfg.norm == "rmsnorm" else layernorm(x, params)
 
 
-def make_model_acts(cfg: ModelCfg) -> ActBundle:
-    return make_acts(cfg.act_impl, cfg.act_backend)
+def make_model_acts(cfg: ModelCfg, table_store=None) -> ActBundle:
+    """``table_store`` pins where PPA tables resolve from (None = the
+    process default store); it is part of the bundle cache key."""
+    return make_acts(cfg.act_impl, cfg.act_backend, table_store)
 
 
 def _cast_params(params, cfg: ModelCfg):

@@ -6,7 +6,10 @@ cache rows inserted with a batched dynamic update); every ``step()``
 decodes all active slots at once; finished sequences free their slot.
 Sampling: greedy or temperature.  The PPA activation tables run inside
 both prefill and decode when the model config selects ``act_impl="ppa"``
-— serving *is* the paper's deployment scenario.
+— serving *is* the paper's deployment scenario, so the engine resolves
+its activation tables through the :mod:`repro.compiler` table store
+(memory -> disk -> compile) rather than compiling inline: a fleet of
+engine processes sharing one artifact directory compiles each table once.
 """
 
 from __future__ import annotations
@@ -18,6 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compiler import TableStore
 from repro.models import (ModelCfg, ShardCtx, decode_step, init_cache,
                           make_model_acts, prefill)
 
@@ -39,10 +43,15 @@ class Request:
 class ServeEngine:
     def __init__(self, cfg: ModelCfg, params, *, n_slots: int = 4,
                  cache_len: int = 256, ctx: Optional[ShardCtx] = None,
-                 rng_seed: int = 0):
+                 rng_seed: int = 0, table_store: Optional[TableStore] = None):
         self.cfg = cfg
         self.params = params
-        self.acts = make_model_acts(cfg)
+        # PPA activation tables resolve through the store: an engine given
+        # its own store (e.g. a pinned deployment artifact directory) gets
+        # a bundle built from it — the store is part of the bundle cache
+        # key, so engines with different stores never share tables.
+        self.table_store = table_store
+        self.acts = make_model_acts(cfg, table_store)
         self.ctx = ctx or ShardCtx()
         self.n_slots = n_slots
         self.cache_len = cache_len

@@ -1,0 +1,188 @@
+"""repro.compiler subsystem: artifact round-trips, store hit/miss
+semantics, memoized-evaluator equivalence + reuse, batch driver, and the
+PPATable -> Pallas kernel adapter parity."""
+
+import numpy as np
+import pytest
+
+from repro.compiler import (CompileJob, CompilerSession, TableStore,
+                            compile_batch, compile_or_load, compile_table)
+from repro.core import (FWLConfig, PPAScheme, eval_table_int,
+                        grid_for_interval, hardware_constrained_ppa,
+                        make_quantizer, optimize_fwls)
+from repro.core.functions import get_naf
+from repro.core.schemes import PPATable
+from repro.core.segmentation import SegmentEvaluator, estimate_tseg
+from repro.kernels import ppa_eval_table
+
+CFG = FWLConfig(7, 7, (7,), (7,), 7)
+SCHEME = PPAScheme(1, None, "fqa")
+
+
+@pytest.fixture(scope="module")
+def small_table():
+    return compile_table("sigmoid", CFG, SCHEME)
+
+
+def _tables_equal(a: PPATable, b: PPATable) -> bool:
+    return (a.naf == b.naf and a.interval == b.interval and a.cfg == b.cfg
+            and a.scheme == b.scheme
+            and np.array_equal(a.starts_int, b.starts_int)
+            and np.array_equal(a.a_int, b.a_int)
+            and np.array_equal(a.b_int, b.b_int)
+            and a.mae_hard == b.mae_hard and a.mae_t == b.mae_t)
+
+
+# -- artifact round-trips ------------------------------------------------------
+def test_table_json_roundtrip(small_table):
+    back = PPATable.from_json(small_table.to_json())
+    assert _tables_equal(small_table, back)
+    assert back.stats == small_table.stats
+
+
+def test_table_save_load_roundtrip(small_table, tmp_path):
+    p = tmp_path / "tab.json"
+    small_table.save(p)
+    assert _tables_equal(small_table, PPATable.load(p))
+
+
+# -- store semantics -----------------------------------------------------------
+def test_store_memory_hit_does_zero_evaluations(tmp_path):
+    store = TableStore(tmp_path)
+    s1, s2 = CompilerSession(), CompilerSession()
+    t1 = store.compile_or_load("sigmoid", CFG, SCHEME, session=s1)
+    assert store.misses == 1 and store.hits_mem == 0
+    assert s1.counters()["calls"] > 0
+    t2 = store.compile_or_load("sigmoid", CFG, SCHEME, session=s2)
+    assert store.hits_mem == 1
+    # acceptance: the second compile_or_load performs zero segment evals
+    assert s2.counters()["calls"] == 0
+    assert s2.counters()["cand_evals"] == 0
+    assert _tables_equal(t1, t2)
+
+
+def test_store_disk_tier_shared_across_stores(tmp_path):
+    TableStore(tmp_path).compile_or_load("sigmoid", CFG, SCHEME)
+    fresh = TableStore(tmp_path)          # new process's view of the dir
+    sess = CompilerSession()
+    tab = fresh.compile_or_load("sigmoid", CFG, SCHEME, session=sess)
+    assert fresh.hits_disk == 1 and fresh.misses == 0
+    assert sess.counters()["calls"] == 0
+    assert tab.num_segments > 0
+
+
+def test_store_key_distinguishes_requests(tmp_path):
+    store = TableStore(tmp_path)
+    a = store.compile_or_load("sigmoid", CFG, SCHEME)
+    b = store.compile_or_load("sigmoid", CFG, SCHEME, mae_t=2 * a.mae_t)
+    assert store.misses == 2
+    assert b.mae_t != a.mae_t
+    # resolved defaults share one address with the explicit equivalent
+    explicit = CompileJob("sigmoid", CFG, SCHEME,
+                          mae_t=0.5 ** (CFG.w_out + 1),
+                          interval=get_naf("sigmoid").interval)
+    assert CompileJob("sigmoid", CFG, SCHEME).key() == explicit.key()
+
+
+def test_compile_batch_serial_lands_in_store(tmp_path):
+    store = TableStore(tmp_path)
+    jobs = [CompileJob("sigmoid", CFG, SCHEME),
+            CompileJob("tanh", CFG, SCHEME),
+            CompileJob("sigmoid", CFG, SCHEME)]   # duplicate of job 0
+    tabs = compile_batch(jobs, store=store, processes=1)
+    assert [t.naf for t in tabs] == ["sigmoid", "tanh", "sigmoid"]
+    assert _tables_equal(tabs[0], tabs[2])
+    # duplicates resolve from the store, and a re-run is all hits
+    again = compile_batch(jobs, store=store, processes=1)
+    assert all(_tables_equal(x, y) for x, y in zip(tabs, again))
+    assert store.hits_mem >= 3
+
+
+# -- memoized evaluation -------------------------------------------------------
+def test_memoized_compile_identical_to_seed():
+    cold = compile_table("sigmoid", CFG, SCHEME,
+                         session=CompilerSession(memoize=False))
+    warm = compile_table("sigmoid", CFG, SCHEME, session=CompilerSession())
+    assert _tables_equal(cold, warm)
+    assert warm.stats["candidate_evals"] <= cold.stats["candidate_evals"]
+    assert warm.stats["memo_hits"] > 0
+
+
+def test_hw_constrained_reuses_across_iterations():
+    results = {}
+    for memo in (False, True):
+        sess = CompilerSession(memoize=memo)
+        res = hardware_constrained_ppa("sigmoid", CFG, SCHEME, seg_t=6,
+                                       session=sess)
+        results[memo] = (res.table, sess.counters())
+    t_cold, c_cold = results[False]
+    t_warm, c_warm = results[True]
+    assert t_warm.num_segments == t_cold.num_segments
+    assert t_warm.mae_hard == t_cold.mae_hard
+    # acceptance: strictly fewer candidate evaluations, identical result
+    assert c_warm["cand_evals"] < c_cold["cand_evals"]
+    assert c_warm["hits"] > 0
+
+
+def test_fwl_search_reuses_across_candidates():
+    results = {}
+    for memo in (False, True):
+        sess = CompilerSession(memoize=memo)
+        res = optimize_fwls("sigmoid", w_in=6, w_out=6, scheme=SCHEME,
+                            session=sess)
+        results[memo] = (res.cfg, res.table, sess.counters())
+    cfg_cold, t_cold, c_cold = results[False]
+    cfg_warm, t_warm, c_warm = results[True]
+    assert cfg_warm == cfg_cold
+    assert t_warm.num_segments == t_cold.num_segments
+    assert t_warm.mae_hard == t_cold.mae_hard
+    assert c_warm["cand_evals"] < c_cold["cand_evals"]
+
+
+def test_retarget_keeps_cache_valid():
+    sess = CompilerSession()
+    loose = compile_table("sigmoid", CFG, SCHEME, mae_t=0.02, session=sess)
+    tight = compile_table("sigmoid", CFG, SCHEME, mae_t=0.005, session=sess)
+    ref = compile_table("sigmoid", CFG, SCHEME, mae_t=0.005,
+                        session=CompilerSession(memoize=False))
+    assert _tables_equal(tight, ref)
+    assert loose.num_segments <= tight.num_segments
+
+
+def test_estimate_tseg_shared_helper_fallback():
+    spec = get_naf("sigmoid")
+    x = grid_for_interval(*spec.interval, CFG.w_in)
+    f = spec(x.astype(np.float64) / (1 << CFG.w_in))
+    ev = SegmentEvaluator(x, f, CFG, make_quantizer("plac"),
+                          0.5 ** (CFG.w_out + 1))
+    tseg, seg_ref = estimate_tseg(ev)
+    assert tseg >= 1 and seg_ref >= 1
+    assert tseg == 1 << max(0, int(round(np.log2(max(1, seg_ref)))))
+    # unreachable MAE_t: the reference run fails -> dense-but-bounded target
+    ev0 = SegmentEvaluator(x, f, CFG, make_quantizer("plac"), 0.0)
+    tseg0, seg0 = estimate_tseg(ev0)
+    assert seg0 == max(4, ev0.num // 8) and tseg0 >= 4
+
+
+# -- kernel adapter ------------------------------------------------------------
+def test_ppa_eval_table_matches_numpy_golden(small_table):
+    x = grid_for_interval(*small_table.interval, small_table.cfg.w_in)
+    gold = eval_table_int(small_table, x)
+    y = np.asarray(ppa_eval_table(small_table, x))      # 1-D, padded inside
+    assert np.array_equal(y, gold)
+    x2 = x[: (x.size // 4) * 4].reshape(4, -1)          # 2-D shape preserved
+    y2 = np.asarray(ppa_eval_table(small_table, x2))
+    assert y2.shape == x2.shape
+    assert np.array_equal(y2, eval_table_int(small_table, x2))
+
+
+def test_compile_or_load_default_store_roundtrip(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_TABLE_CACHE", str(tmp_path))
+    import repro.compiler.store as store_mod
+    monkeypatch.setattr(store_mod, "_DEFAULT", None)
+    t1 = compile_or_load("sigmoid", CFG, SCHEME)
+    sess = CompilerSession()
+    t2 = compile_or_load("sigmoid", CFG, SCHEME, session=sess)
+    assert sess.counters()["calls"] == 0
+    assert _tables_equal(t1, t2)
+    assert any(tmp_path.iterdir())      # disk tier written under the env dir

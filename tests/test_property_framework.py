@@ -4,6 +4,9 @@ properties in test_property_fqa.py)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
