@@ -24,11 +24,16 @@ def main():
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--act-impl", default="ppa",
                     choices=["exact", "ppa", "ppa8"])
+    ap.add_argument("--act-backend", default=None,
+                    help="PPA execution backend override, e.g. "
+                         "pallas_fused (TPU) / pallas_fused_interpret (CPU);"
+                         " see repro.kernels.available_backends()")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch).replace(act_impl=args.act_impl)
     params = init_params(param_specs(cfg), jax.random.PRNGKey(0))
-    eng = ServeEngine(cfg, params, n_slots=4, cache_len=64)
+    eng = ServeEngine(cfg, params, n_slots=4, cache_len=64,
+                      act_backend=args.act_backend)
 
     rng = np.random.default_rng(0)
     reqs = []
@@ -54,7 +59,8 @@ def main():
         print(f"req {r.rid}: {r.output}")
     total = args.requests * args.max_new
     print(f"\n{total} tokens in {dt:.2f}s = {total / dt:.1f} tok/s "
-          f"(act_impl={cfg.act_impl}, arch={cfg.arch})")
+          f"(act_impl={cfg.act_impl}, act_backend={eng.cfg.act_backend}, "
+          f"arch={cfg.arch})")
 
 
 if __name__ == "__main__":

@@ -5,6 +5,11 @@
 #                         ROADMAP.md pins as the repo's verify gate)
 #   scripts/ci.sh fast    quick iteration subset: skip the slow paper-table
 #                         compiles and the dry-run mesh tests
+#   scripts/ci.sh bench-smoke
+#                         kernel-layer benchmark in tiny dry-run shape:
+#                         fused + unfused + Pallas paths must run and stay
+#                         bit-exact, so kernel regressions fail CI rather
+#                         than only the offline benchmark
 #
 # Extra args after the mode are forwarded to pytest, e.g.
 #   scripts/ci.sh fast -k compiler
@@ -22,8 +27,15 @@ case "$mode" in
   fast)
     exec python -m pytest -q -m "not slow and not dryrun" "$@"
     ;;
+  bench-smoke)
+    out="$(python -m benchmarks.kernel_throughput --smoke)" || exit 1
+    echo "$out"
+    case "$out" in
+      *False*) echo "bench-smoke: bit-exactness check FAILED" >&2; exit 1 ;;
+    esac
+    ;;
   *)
-    echo "usage: scripts/ci.sh [tier1|fast] [pytest args...]" >&2
+    echo "usage: scripts/ci.sh [tier1|fast|bench-smoke] [pytest args...]" >&2
     exit 2
     ;;
 esac

@@ -20,8 +20,9 @@ import dataclasses
 import hashlib
 import json
 import os
+import time
 from pathlib import Path
-from typing import Dict, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 from repro.core.datapath import FWLConfig
 from repro.core.schemes import PPAScheme, PPATable
@@ -86,16 +87,29 @@ class CompileJob:
 
 
 class TableStore:
-    """Two-tier (memory + JSON disk) content-addressed PPATable store."""
+    """Two-tier (memory + JSON disk) content-addressed PPATable store.
+
+    ``max_entries`` bounds the memory tier: the least-recently-*accessed*
+    table is evicted when the cap is exceeded (a dict re-insertion on every
+    hit keeps insertion order == access order).  Eviction only drops the
+    in-process copy — the disk tier still holds the artifact, so a re-access
+    costs one JSON parse, never a recompile.  The disk tier is bounded
+    separately and explicitly via :meth:`prune`.
+    """
 
     def __init__(self, root: "Optional[str | Path]" = None,
-                 *, persist: bool = True):
+                 *, persist: bool = True,
+                 max_entries: Optional[int] = None):
+        if max_entries is not None and max_entries < 1:
+            raise ValueError("max_entries must be >= 1 (or None = unbounded)")
         self._root = Path(root) if root is not None else None
         self.persist = persist
+        self.max_entries = max_entries
         self._mem: Dict[str, PPATable] = {}
         self.hits_mem = 0
         self.hits_disk = 0
         self.misses = 0
+        self.evictions = 0
 
     @property
     def root(self) -> Path:
@@ -108,11 +122,22 @@ class TableStore:
         return self.root / f"{job.naf}-{job.scheme.tag}-{key}.json"
 
     # -- tiers -----------------------------------------------------------------
+    def _remember(self, key: str, table: PPATable) -> None:
+        """Insert/refresh ``key`` as the most-recently-accessed memory entry,
+        evicting the least-recently-accessed entries beyond ``max_entries``."""
+        self._mem.pop(key, None)
+        self._mem[key] = table
+        if self.max_entries is not None:
+            while len(self._mem) > self.max_entries:
+                self._mem.pop(next(iter(self._mem)))
+                self.evictions += 1
+
     def _lookup(self, job: CompileJob, key: str) -> Optional[PPATable]:
         """Memory then disk for an already-resolved job; no compile."""
         tab = self._mem.get(key)
         if tab is not None:
             self.hits_mem += 1
+            self._remember(key, tab)        # refresh LRU position
             return tab
         if self.persist:
             path = self._path(job, key)
@@ -123,12 +148,16 @@ class TableStore:
                     path.unlink(missing_ok=True)
                 else:
                     self.hits_disk += 1
-                    self._mem[key] = tab
+                    try:                    # refresh last-access for prune()
+                        os.utime(path)
+                    except OSError:
+                        pass
+                    self._remember(key, tab)
                     return tab
         return None
 
     def _put(self, job: CompileJob, key: str, table: PPATable) -> None:
-        self._mem[key] = table
+        self._remember(key, table)
         if self.persist:
             path = self._path(job, key)
             tmp = path.with_suffix(f".{os.getpid()}.tmp")
@@ -165,9 +194,46 @@ class TableStore:
         self._put(job, key, tab)
         return tab
 
+    # -- disk-tier GC ----------------------------------------------------------
+    def prune(self, *, max_files: Optional[int] = None,
+              max_age_s: Optional[float] = None) -> List[Path]:
+        """Bound the append-only disk tier, keyed on last access.
+
+        Last access is the file mtime — refreshed by ``os.utime`` on every
+        disk-tier hit, so it tracks reads, not just writes.  Removes
+        artifacts older than ``max_age_s`` and/or the least-recently-
+        accessed files beyond ``max_files``; with neither given this is a
+        no-op.  Returns the removed paths.  Memory-tier entries are
+        untouched (they are bounded by ``max_entries`` instead).
+        """
+        if not self.persist or (max_files is None and max_age_s is None):
+            return []
+        entries = []                        # stat once, tolerate other
+        for p in self.root.glob("*.json"):  # processes pruning concurrently
+            try:
+                entries.append((p, p.stat().st_mtime))
+            except OSError:
+                continue
+        entries.sort(key=lambda e: e[1])
+        doomed = []
+        if max_age_s is not None:
+            cutoff = time.time() - max_age_s
+            doomed += [p for p, mtime in entries if mtime < cutoff]
+        if max_files is not None and len(entries) > max_files:
+            doomed += [p for p, _ in entries[:len(entries) - max_files]]
+        removed = []
+        for p in dict.fromkeys(doomed):     # dedup, keep LRU order
+            try:
+                p.unlink()
+            except OSError:
+                continue
+            removed.append(p)
+        return removed
+
     def stats(self) -> Dict[str, int]:
         return {"hits_mem": self.hits_mem, "hits_disk": self.hits_disk,
-                "misses": self.misses, "in_memory": len(self._mem)}
+                "misses": self.misses, "in_memory": len(self._mem),
+                "evictions": self.evictions}
 
 
 _DEFAULT: Optional[TableStore] = None

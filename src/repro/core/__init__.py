@@ -3,7 +3,8 @@ PPA compilation (fit -> quantize -> segment -> pack), TBW segmentation, the
 FQA-On / FQA-Sm-On schemes, the FWL design flow, the hardware-constrained
 workflow and the calibrated hardware cost model."""
 
-from .datapath import FWLConfig, concat_add, horner_fixed
+from .datapath import (DatapathPlan, FWLConfig, apply_shift, concat_add,
+                       horner_body, horner_fixed)
 from .fixed_point import (from_fixed, grid_for_interval, hamming_weight,
                           min_signed_digits, round_half_away, to_fixed,
                           trunc_shift)
@@ -21,7 +22,8 @@ from .segmentation import (Segment, SegmentEvaluator, bisection_segment,
 from .workflow import WorkflowResult, hardware_constrained_ppa
 
 __all__ = [
-    "FWLConfig", "concat_add", "horner_fixed",
+    "DatapathPlan", "FWLConfig", "apply_shift", "concat_add", "horner_body",
+    "horner_fixed",
     "from_fixed", "grid_for_interval", "hamming_weight", "min_signed_digits",
     "round_half_away", "to_fixed", "trunc_shift",
     "NAF_REGISTRY", "NAFSpec", "get_naf",

@@ -30,7 +30,8 @@ import numpy as np
 
 from .fixed_point import trunc_shift
 
-__all__ = ["FWLConfig", "horner_fixed", "concat_add"]
+__all__ = ["FWLConfig", "DatapathPlan", "apply_shift", "horner_body",
+           "horner_fixed", "concat_add"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -82,6 +83,121 @@ class FWLConfig:
         return dataclasses.asdict(self)
 
 
+@dataclasses.dataclass(frozen=True)
+class DatapathPlan:
+    """Every compile-time shift/alignment constant of the decoupled-FWL
+    Horner datapath, derived **exactly once** (here) from an
+    :class:`FWLConfig`.
+
+    All executors — the numpy golden model (:func:`horner_fixed`), the jnp
+    reference op (kernels/ref.py), the tiled Pallas kernels (kernels/ppa.py,
+    kernels/softmax_ppa.py) and the fused activation kernel
+    (kernels/fused.py) — consume a plan instead of re-deriving alignments
+    from raw word lengths, so a width bookkeeping bug cannot diverge
+    between paths.
+
+    Shift sign convention matches :func:`apply_shift`: positive = arithmetic
+    right shift (truncation), negative = exact left shift.  The ``up_*``
+    fields store the (non-negative) left-shift *amounts* of the concat-adder
+    alignments.
+
+      mult_shifts[i] : truncation at multiplier i output  (-> FWL w_o[i])
+      up_g[i-1]      : align h_i before the concat add with a_{i+1}
+      up_a[i-1]      : align a_{i+1} at the same adder
+      up_h / up_b    : align h_n and b at the final intercept add
+      down_out       : final rescale to w_out (plain truncation — the
+                       ``round_mults`` variant rounds *only* multiplier
+                       outputs, per the FWLConfig docstring)
+      w_pre_b        : FWL of h_n (the pre-intercept value the quantizer's
+                       error-flattening step consumes)
+    """
+
+    order: int
+    w_in: int
+    w_out: int
+    round_mults: bool
+    mult_shifts: Tuple[int, ...]
+    up_g: Tuple[int, ...]
+    up_a: Tuple[int, ...]
+    up_h: int
+    up_b: int
+    down_out: int
+    w_pre_b: int
+
+    @classmethod
+    def from_config(cls, cfg: FWLConfig) -> "DatapathPlan":
+        """The one derivation of FWL alignment constants in the codebase."""
+        n = cfg.order
+        mult_shifts = [cfg.w_a[0] + cfg.w_in - cfg.w_o[0]]
+        up_g, up_a = [], []
+        cur = cfg.w_o[0]
+        for i in range(1, n):
+            wg = max(cur, cfg.w_a[i])
+            up_g.append(wg - cur)
+            up_a.append(wg - cfg.w_a[i])
+            mult_shifts.append(wg + cfg.w_in - cfg.w_o[i])
+            cur = cfg.w_o[i]
+        w_sum = max(cur, cfg.w_b)
+        return cls(order=n, w_in=cfg.w_in, w_out=cfg.w_out,
+                   round_mults=cfg.round_mults,
+                   mult_shifts=tuple(mult_shifts), up_g=tuple(up_g),
+                   up_a=tuple(up_a), up_h=w_sum - cur, up_b=w_sum - cfg.w_b,
+                   down_out=w_sum - cfg.w_out, w_pre_b=cur)
+
+
+def apply_shift(v, sh: int):
+    """Fixed-point rescale by a compile-time shift: ``sh > 0`` truncates
+    (arithmetic right shift, two's-complement floor), ``sh < 0`` is an exact
+    left shift.
+
+    Uses the plain ``>>``/``<<`` operators so the same code runs on numpy
+    int64 (golden model), jnp int32 (reference op) and inside a Pallas
+    kernel — for signed integers both numpy and jnp dispatch ``>>`` to the
+    arithmetic shift."""
+    if sh > 0:
+        return v >> sh
+    if sh < 0:
+        return v << (-sh)
+    return v
+
+
+def horner_body(plan: DatapathPlan, sel: Sequence, x, *,
+                return_pre_b: bool = False):
+    """The one fixed-point Horner chain shared by every executor.
+
+    Args:
+      plan: the precomputed shift constants.
+      sel: sequence of ``order + 1`` *pre-selected* coefficient arrays
+        (a_1..a_n then b), already broadcast/selected per element of ``x``.
+      x: integer input array at FWL ``plan.w_in``.
+
+    Only ``* + >> <<`` are used, so the body is array-namespace agnostic:
+    numpy arrays, jnp arrays and Pallas-traced values all run the identical
+    arithmetic (tests assert exact integer equality across all three).
+    """
+    if len(sel) != plan.order + 1:
+        raise ValueError(
+            f"expected {plan.order + 1} coefficient arrays, got {len(sel)}")
+
+    def trunc_mult(v, sh):
+        # round-half-up only at multiplier-output truncations (round_mults)
+        if plan.round_mults and sh > 0:
+            v = v + (1 << (sh - 1))
+        return apply_shift(v, sh)
+
+    h = trunc_mult(sel[0] * x, plan.mult_shifts[0])
+    for i in range(1, plan.order):
+        g = apply_shift(h, -plan.up_g[i - 1]) \
+            + apply_shift(sel[i], -plan.up_a[i - 1])
+        h = trunc_mult(g * x, plan.mult_shifts[i])
+    out = apply_shift(h, -plan.up_h) + apply_shift(sel[plan.order],
+                                                   -plan.up_b)
+    out = apply_shift(out, plan.down_out)
+    if return_pre_b:
+        return out, (h, plan.w_pre_b)
+    return out
+
+
 def concat_add(u, w_u: int, v, w_v: int):
     """Concatenation adder: exact add of fixed(u, w_u) + fixed(v, w_v).
 
@@ -119,25 +235,7 @@ def horner_fixed(
     if len(a_int) != n:
         raise ValueError(f"expected {n} coefficient arrays, got {len(a_int)}")
     x = np.asarray(x_int)
-
-    def _trunc(v, shift):
-        if cfg.round_mults and shift > 0:
-            v = v + (1 << (shift - 1))
-        return trunc_shift(v, shift)
-
-    # stage 1 multiplier: a1 * x, truncate to w_o[0]
-    h = _trunc(np.asarray(a_int[0])[..., None] * x,
-               cfg.w_a[0] + cfg.w_in - cfg.w_o[0])
-    cur = cfg.w_o[0]
-
-    for i in range(1, n):
-        g, wg = concat_add(h, cur, np.asarray(a_int[i])[..., None], cfg.w_a[i])
-        h = _trunc(g * x, wg + cfg.w_in - cfg.w_o[i])
-        cur = cfg.w_o[i]
-
-    pre_b = (h, cur)
-    out, w_sum = concat_add(h, cur, np.asarray(b_int)[..., None], cfg.w_b)
-    out = trunc_shift(out, w_sum - cfg.w_out)
-    if return_pre_b:
-        return out, pre_b
-    return out
+    sel = [np.asarray(a)[..., None] for a in a_int]
+    sel.append(np.asarray(b_int)[..., None])
+    return horner_body(DatapathPlan.from_config(cfg), sel, x,
+                       return_pre_b=return_pre_b)

@@ -1,0 +1,56 @@
+"""The one in-kernel PPA evaluation body shared by every Pallas kernel.
+
+Hardware mapping of the paper's computation unit (DESIGN.md §3/§5):
+
+  * index generator (s-1 comparators) -> :func:`select_coeffs_sweep`, a
+    compare-select sweep over the sorted segment-start vector held in VMEM.
+    Because starts are sorted ascending, the running
+    ``where(x >= starts[s], row_s, acc)`` sweep leaves exactly the last
+    matching row selected — the vectorised analogue of the parallel
+    comparator + priority encoder, with no per-element dynamic addressing
+    (which the TPU vector unit cannot do efficiently).
+  * truncating multipliers / concat adders -> ``core.datapath.horner_body``
+    driven by a :class:`~repro.core.datapath.DatapathPlan`; the shift
+    constants are compile-time ints baked into the kernel, and the body is
+    the *same code object* the numpy golden model and the jnp reference op
+    execute, so the three paths cannot drift apart.
+
+Every Pallas kernel in this package (kernels/ppa.py, kernels/softmax_ppa.py,
+kernels/fused.py) calls :func:`ppa_eval_block` for its integer datapath
+stage; nothing in this package derives a shift amount on its own.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+import jax.numpy as jnp
+
+from repro.core.datapath import DatapathPlan, horner_body
+
+__all__ = ["select_coeffs_sweep", "ppa_eval_block"]
+
+
+def select_coeffs_sweep(x_int, starts_ref, coef_ref, *, num_segments: int,
+                        order: int) -> List:
+    """Comparator-sweep segment select: returns the ``order + 1`` coefficient
+    planes (a_1..a_n, b) selected per element of ``x_int``.
+
+    ``starts_ref``/``coef_ref`` may be Pallas Refs or plain arrays — only
+    scalar indexing is used, so VMEM scalar loads and jnp indexing both work.
+    """
+    sel = [jnp.full(x_int.shape, coef_ref[0, c], dtype=jnp.int32)
+           for c in range(order + 1)]
+    for s in range(1, num_segments):
+        ge = x_int >= starts_ref[s]
+        for c in range(order + 1):
+            sel[c] = jnp.where(ge, coef_ref[s, c], sel[c])
+    return sel
+
+
+def ppa_eval_block(x_int, starts_ref, coef_ref, plan: DatapathPlan, *,
+                   num_segments: int):
+    """segment-select sweep + fixed-point Horner chain for one tile."""
+    sel = select_coeffs_sweep(x_int, starts_ref, coef_ref,
+                              num_segments=num_segments, order=plan.order)
+    return horner_body(plan, sel, x_int)

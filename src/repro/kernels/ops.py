@@ -6,25 +6,40 @@ in, float tensors out, with the fixed-point datapath bit-exact in the middle.
 
 Pieces:
 
-* ``TableConsts``    — the table packed as jnp arrays (device constants).
+* ``TableConsts``    — the table packed as jnp arrays (device constants),
+  plus the table's :class:`~repro.core.datapath.DatapathPlan`.
 * ``ppa_apply``      — quantize -> range-reduce -> datapath -> dequantize,
   with symmetry handling (odd / sigmoid) and saturation outside the fitted
   interval, exactly as a hardware NAF unit would be deployed in front of an
   accelerator's vector lanes.
-* ``ppa_act``        — custom_vjp wrapper: the forward pass is the PPA
-  datapath, the backward pass is the *exact* derivative of the target NAF
-  (straight-through estimator — standard QAT practice, and the only sound
-  choice since the piecewise datapath has zero/undefined derivatives at
-  segment boundaries).
+* ``ppa_gate``       — the gated form ``x * T(x)`` (silu = x * sigmoid(x),
+  gelu = x * Phi(x)); on the fused backend the gating multiply happens
+  inside the kernel, on every other backend it is the same float32 multiply
+  applied outside — bit-identical either way.
+* ``ppa_act`` / ``ppa_gate_act`` — custom_vjp wrappers: the forward pass is
+  the PPA datapath, the backward pass is the *exact* derivative of the
+  target NAF (straight-through estimator — standard QAT practice, and the
+  only sound choice since the piecewise datapath has zero/undefined
+  derivatives at segment boundaries).
 * ``ppa_softmax``    — softmax whose exp is computed via the ``exp2_frac``
   table: exp(x) = 2**(x*log2e) = 2**k * table(frac), with the power-of-two
   scale applied exactly in float (ldexp is exact).
-* ``silu/gelu/...``  — convenience constructors used by the model configs.
 
-Execution path selection: ``backend="ref"`` (default, pure jnp —
-searchsorted+gather, runs everywhere) or ``backend="pallas"`` (the
-explicitly-tiled TPU kernel from kernels/ppa.py; interpret=True on CPU).
-Both are bit-identical; tests assert exact integer equality.
+Execution path selection goes through the **backend registry**
+(:func:`register_backend` / :func:`available_backends`):
+
+  ref                     pure jnp searchsorted + shared Horner body
+                          (paper-faithful; runs everywhere) — the default
+  lut_value               one gather; the PPA compile is the LUT generator
+  lut_index               gather the segment index, keep the Horner datapath
+  pallas[_interpret]      the tiled int32 TPU kernel (kernels/ppa.py)
+  pallas_fused[_interpret] the fused float->PPA->float kernel
+                          (kernels/fused.py): quantize, symmetry, segment
+                          select, Horner, dequantize, saturation and the
+                          optional self-gating in ONE pallas_call
+
+``*_interpret`` variants run the same kernel in interpret mode (CPU
+validation).  All backends are bit-identical; tests assert exact equality.
 """
 
 from __future__ import annotations
@@ -32,21 +47,23 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
-from typing import Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.datapath import FWLConfig
+from repro.core.datapath import DatapathPlan, FWLConfig
 from repro.core.functions import get_naf
 from repro.core.schemes import PPATable
 
-from .ppa import ppa_eval_2d
-from .ref import ppa_eval_ref
+from .fused import ppa_fused_apply
+from .ppa import pad_to_tiles, ppa_eval_2d
+from .ref import horner_int, ppa_eval_ref
 
-__all__ = ["TableConsts", "pack_table", "ppa_apply", "ppa_act",
-           "ppa_softmax", "make_ppa_fn"]
+__all__ = ["TableConsts", "pack_table", "ppa_apply", "ppa_gate", "ppa_act",
+           "ppa_gate_act", "ppa_softmax", "make_ppa_fn", "Backend",
+           "register_backend", "get_backend", "available_backends"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -75,7 +92,20 @@ class TableConsts:
     #                       the *compiler* for the LUT, per DESIGN.md §3)
     idx_lut: jax.Array = dataclasses.field(compare=False, default=None)
     val_lut: jax.Array = dataclasses.field(compare=False, default=None)
-    lo: int = 0
+    lo: int = 0                 # integer interval [lo, hi) at FWL w_in
+    hi: int = 0
+
+    @property
+    def fwl_config(self) -> FWLConfig:
+        return FWLConfig(w_in=self.w_in, w_out=self.w_out, w_a=self.w_a,
+                         w_o=self.w_o, w_b=self.w_b,
+                         round_mults=self.round_mults)
+
+    @property
+    def plan(self) -> DatapathPlan:
+        """The shift/alignment constants every backend executes with —
+        derived in exactly one place (DatapathPlan.from_config)."""
+        return DatapathPlan.from_config(self.fwl_config)
 
 
 def pack_table(table: PPATable) -> TableConsts:
@@ -112,44 +142,111 @@ def pack_table(table: PPATable) -> TableConsts:
         coefs=jnp.asarray(coefs, dtype=jnp.int32),
         idx_lut=jnp.asarray(idx, dtype=jnp.int32),
         val_lut=jnp.asarray(vals, dtype=jnp.int32),
-        lo=lo)
+        lo=lo, hi=hi)
 
 
-def _eval_int(tc: TableConsts, x_int: jax.Array, backend: str) -> jax.Array:
-    kw = dict(w_in=tc.w_in, w_out=tc.w_out, w_a=tc.w_a, w_o=tc.w_o,
-              w_b=tc.w_b, round_mults=tc.round_mults)
-    if backend == "ref":
-        return ppa_eval_ref(x_int, tc.starts, tc.coefs, **kw)
-    if backend == "lut_value":
-        # one gather; the PPA compile is the LUT generator (bit-exact)
-        return jnp.take(tc.val_lut, x_int - tc.lo, axis=0)
-    if backend == "lut_index":
-        # keep the Horner datapath, replace the segment search by a gather
-        idx = jnp.take(tc.idx_lut, x_int - tc.lo, axis=0)
-        sel = tc.coefs[idx]
-        from .ref import horner_int
-        return horner_int(sel, x_int, **kw)
-    if backend in ("pallas", "pallas_interpret"):
-        shape = x_int.shape
-        flat = x_int.reshape(-1)
-        bm, bn = 8, 128
-        n = flat.shape[0]
-        pad = (-n) % (bm * bn)
-        flat = jnp.pad(flat, (0, pad))
-        x2 = flat.reshape(-1, bn)
-        # grow block_m up to 256 rows while it divides
-        rows = x2.shape[0]
-        while bm < 256 and rows % (bm * 2) == 0:
-            bm *= 2
-        out = ppa_eval_2d(x2, tc.starts, tc.coefs, block=(bm, bn),
-                          interpret=(backend == "pallas_interpret"), **kw)
-        return out.reshape(-1)[:n].reshape(shape)
-    raise ValueError(f"unknown backend {backend!r}")
+# --------------------------------------------------------------------------
+# backend registry
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Backend:
+    """One execution path for a packed table.
+
+    Exactly one of the two hooks is set:
+      eval_int(tc, x_int) -> y_int   integer datapath only; the generic
+                                     float conditioning in _apply_f32 wraps
+                                     it (quantize/symmetry/saturation/gate).
+      apply(tc, xf, gate) -> y_f32   the whole float->float pipeline
+                                     (fused kernels own their conditioning).
+    """
+
+    name: str
+    eval_int: Optional[Callable] = None
+    apply: Optional[Callable] = None
+    doc: str = ""
 
 
-def ppa_apply(tc: TableConsts, x: jax.Array, *, backend: str = "ref"
-              ) -> jax.Array:
-    """Full deployment path: float in -> fixed-point PPA datapath -> float out.
+_BACKENDS: Dict[str, Backend] = {}
+
+
+def register_backend(name: str, *, eval_int: Optional[Callable] = None,
+                     apply: Optional[Callable] = None, doc: str = "") -> None:
+    """Register an execution backend (see docs/ARCHITECTURE.md §"adding a
+    backend").  Re-registering a name overwrites it."""
+    if (eval_int is None) == (apply is None):
+        raise ValueError("exactly one of eval_int/apply must be given")
+    _BACKENDS[name] = Backend(name, eval_int=eval_int, apply=apply, doc=doc)
+
+
+def get_backend(name: str) -> Backend:
+    try:
+        return _BACKENDS[name]
+    except KeyError:
+        raise ValueError(f"unknown backend {name!r}; "
+                         f"available: {available_backends()}") from None
+
+
+def available_backends() -> List[str]:
+    return sorted(_BACKENDS)
+
+
+def _eval_ref(tc: TableConsts, x_int: jax.Array) -> jax.Array:
+    return ppa_eval_ref(x_int, tc.starts, tc.coefs, tc.plan)
+
+
+def _eval_lut_value(tc: TableConsts, x_int: jax.Array) -> jax.Array:
+    # one gather; the PPA compile is the LUT generator (bit-exact)
+    return jnp.take(tc.val_lut, x_int - tc.lo, axis=0)
+
+
+def _eval_lut_index(tc: TableConsts, x_int: jax.Array) -> jax.Array:
+    # keep the Horner datapath, replace the segment search by a gather
+    idx = jnp.take(tc.idx_lut, x_int - tc.lo, axis=0)
+    return horner_int(tc.coefs.astype(jnp.int32)[idx], x_int, tc.plan)
+
+
+def _eval_pallas(tc: TableConsts, x_int: jax.Array, *,
+                 interpret: bool) -> jax.Array:
+    shape = x_int.shape
+    flat = x_int.reshape(-1)
+    n = flat.shape[0]
+    x2, blk = pad_to_tiles(flat, 256, 128)
+    out = ppa_eval_2d(x2, tc.starts, tc.coefs, tc.plan, block=blk,
+                      interpret=interpret)
+    return out.reshape(-1)[:n].reshape(shape)
+
+
+def _apply_fused(tc: TableConsts, xf: jax.Array, gate: bool, *,
+                 interpret: bool) -> jax.Array:
+    return ppa_fused_apply(tc, xf, gate=gate, interpret=interpret)
+
+
+register_backend("ref", eval_int=_eval_ref,
+                 doc="pure jnp searchsorted + shared Horner body (default)")
+register_backend("lut_value", eval_int=_eval_lut_value,
+                 doc="one gather over the pre-tabulated datapath output")
+register_backend("lut_index", eval_int=_eval_lut_index,
+                 doc="gathered segment index + Horner datapath")
+register_backend("pallas",
+                 eval_int=functools.partial(_eval_pallas, interpret=False),
+                 doc="tiled int32 Pallas kernel (TPU)")
+register_backend("pallas_interpret",
+                 eval_int=functools.partial(_eval_pallas, interpret=True),
+                 doc="tiled int32 Pallas kernel, interpret mode (CPU)")
+register_backend("pallas_fused",
+                 apply=functools.partial(_apply_fused, interpret=False),
+                 doc="fused float->PPA->float Pallas kernel (TPU)")
+register_backend("pallas_fused_interpret",
+                 apply=functools.partial(_apply_fused, interpret=True),
+                 doc="fused float->PPA->float kernel, interpret mode (CPU)")
+
+
+# --------------------------------------------------------------------------
+# float deployment path
+# --------------------------------------------------------------------------
+def _apply_f32(tc: TableConsts, x0: jax.Array, backend: str,
+               gate: bool) -> jax.Array:
+    """float32 in -> float32 out deployment pipeline.
 
     Range reduction (hardware pre/post conditioning around the NAF unit):
       symmetry "odd":     f(-x) = -f(x)       -> evaluate |x|, restore sign
@@ -157,25 +254,27 @@ def ppa_apply(tc: TableConsts, x: jax.Array, *, backend: str = "ref"
       symmetry "minus_x": f(-x) = f(x) - x    -> softplus/silu half-line
       saturation:         x >= xe             -> sat_hi const, or x itself
                           (sat_identity: softplus/silu ~ identity above xe)
+      gate:               multiply by the raw input (silu/gelu: x * T(x))
+
+    Fused backends run all of this inside their kernel; the jnp version
+    below is the reference composition the fused kernel mirrors op-for-op.
     """
-    dtype = x.dtype
-    xf = x.astype(jnp.float32)
-    xs, xe = tc.interval
-    neg = xf < 0 if tc.symmetry else None
-    if tc.symmetry:
-        xf = jnp.abs(xf)
+    be = get_backend(backend)
+    if be.apply is not None:
+        return be.apply(tc, x0, gate)
+
+    xf = jnp.abs(x0) if tc.symmetry else x0
+    neg = x0 < 0
 
     # quantize to the input grid (round-half-away, matching to_fixed)
     scale_in = float(1 << tc.w_in)
     x_int = jnp.floor(jnp.abs(xf) * scale_in + 0.5).astype(jnp.int32)
     x_int = jnp.where(xf < 0, -x_int, x_int)  # xf >= 0 under symmetry anyway
 
-    lo = int(math.ceil(xs * scale_in - 1e-12))
-    hi = int(math.ceil(xe * scale_in - 1e-12))
-    oob_hi = x_int >= hi
-    x_int_c = jnp.clip(x_int, lo, hi - 1)
+    oob_hi = x_int >= tc.hi
+    x_int_c = jnp.clip(x_int, tc.lo, tc.hi - 1)
 
-    y_int = _eval_int(tc, x_int_c, backend)
+    y_int = be.eval_int(tc, x_int_c)
     y = y_int.astype(jnp.float32) / float(1 << tc.w_out)
 
     if tc.sat_identity:
@@ -188,7 +287,27 @@ def ppa_apply(tc: TableConsts, x: jax.Array, *, backend: str = "ref"
         y = jnp.where(neg, 1.0 - y, y)
     elif tc.symmetry == "minus_x":
         y = jnp.where(neg, y - xf, y)
-    return y.astype(dtype)
+    if gate:
+        y = x0 * y
+    return y
+
+
+def ppa_apply(tc: TableConsts, x: jax.Array, *, backend: str = "ref"
+              ) -> jax.Array:
+    """Full deployment path: float in -> fixed-point PPA datapath -> float
+    out, through the selected backend."""
+    return _apply_f32(tc, x.astype(jnp.float32), backend,
+                      False).astype(x.dtype)
+
+
+def ppa_gate(tc: TableConsts, x: jax.Array, *, backend: str = "ref"
+             ) -> jax.Array:
+    """Gated deployment path ``x * T(x)`` (silu from a sigmoid table, gelu
+    from a gelu_inner table).  The gating multiply runs in float32 before
+    the output cast on every backend — inside the kernel on the fused one —
+    so all backends stay bit-identical."""
+    return _apply_f32(tc, x.astype(jnp.float32), backend,
+                      True).astype(x.dtype)
 
 
 def _exact(naf: str, x: jax.Array) -> jax.Array:
@@ -234,6 +353,29 @@ def _ppa_act_bwd(tc, backend, x, g):
 
 
 ppa_act.defvjp(_ppa_act_fwd, _ppa_act_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 2))
+def ppa_gate_act(tc: TableConsts, x: jax.Array, backend: str = "ref"
+                 ) -> jax.Array:
+    """Gated PPA forward (x * T(x)), exact-derivative backward — the
+    derivative of the *full* gated activation (silu'/gelu'), not of the
+    inner table alone."""
+    return ppa_gate(tc, x, backend=backend)
+
+
+def _ppa_gate_act_fwd(tc, x, backend):
+    return ppa_gate(tc, x, backend=backend), x
+
+
+def _ppa_gate_act_bwd(tc, backend, x, g):
+    f = lambda v: v * _exact(tc.naf, v.astype(jnp.float32))
+    _, vjp = jax.vjp(f, x)
+    (dx,) = vjp(g.astype(jnp.float32))
+    return (dx.astype(x.dtype),)
+
+
+ppa_gate_act.defvjp(_ppa_gate_act_fwd, _ppa_gate_act_bwd)
 
 
 def ppa_softmax(tc_exp2: TableConsts, x: jax.Array, *, axis: int = -1,

@@ -1,125 +1,79 @@
 """Pallas TPU kernel for batched fixed-point PPA activation evaluation.
 
-Hardware mapping of the paper's datapath (DESIGN.md §3/§5):
-
-  * index generator (s-1 comparators)  -> a compare-select sweep over the
-    sorted segment-start vector held in VMEM.  Because starts are sorted
-    ascending, the running ``where(x >= starts[s], row_s, acc)`` sweep
-    leaves exactly the last matching row selected — the vectorised analogue
-    of the parallel comparator + priority encoder, with no per-element
-    dynamic addressing (which the TPU vector unit cannot do efficiently).
-  * coefficient ROM                    -> the (S, n+1) int32 table rides in
-    VMEM next to the block (< 2 KiB for every paper config).
-  * truncating multipliers / concat adders -> int32 multiply + arithmetic
-    right shift (two's-complement floor == the paper's truncation); the
-    concat adder is an exact aligned add (see core/datapath.py).
+The kernel body is the shared one from :mod:`repro.kernels.body` (comparator
+sweep + ``core.datapath.horner_body``); every shift/alignment constant comes
+from a :class:`~repro.core.datapath.DatapathPlan` — this module derives
+nothing on its own.
 
 Block layout: x is tiled (block_m, 128) int32 — the minor dimension matches
 the 128-lane VPU; block_m=256 keeps in+out VMEM traffic at 256 KiB/block,
 far below the ~16 MiB v5e VMEM budget, leaving room for double buffering.
+The (S, n+1) int32 coefficient ROM rides in VMEM next to the block
+(< 2 KiB for every paper config).
 """
 
 from __future__ import annotations
 
 import functools
-from typing import TYPE_CHECKING, Sequence, Tuple
+from typing import TYPE_CHECKING, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
-if TYPE_CHECKING:  # avoid a module-level kernels -> core import edge
+from repro.core.datapath import DatapathPlan, FWLConfig
+
+from .body import ppa_eval_block
+
+if TYPE_CHECKING:  # avoid a module-level kernels -> core.schemes import edge
     from repro.core.schemes import PPATable
 
 DEFAULT_BLOCK = (256, 128)
 
+PlanLike = Union[DatapathPlan, FWLConfig]
 
-def _ppa_kernel(x_ref, starts_ref, coef_ref, out_ref, *, order: int,
-                shifts: Tuple[int, ...], up_g: Tuple[int, ...],
-                up_a: Tuple[int, ...], up_hb: int, up_b: int, down_out: int,
-                num_segments: int, round_mults: bool):
-    """One (block_m, 128) tile: select coefficients, run the Horner chain.
 
-    All shift amounts are compile-time constants baked from the FWLConfig:
-      shifts[i]   : truncation at multiplier i output
-      up_g[i]/up_a[i] : alignment shifts of the concat adder before mult i+1
-      up_hb/up_b  : alignment of the final intercept add
-      down_out    : final rescale to w_out
-    """
-    x = x_ref[...]
+def as_plan(plan: PlanLike) -> DatapathPlan:
+    """Accept a DatapathPlan or derive one from an FWLConfig (the only
+    derivation entrypoint, ``DatapathPlan.from_config``)."""
+    if isinstance(plan, DatapathPlan):
+        return plan
+    return DatapathPlan.from_config(plan)
 
-    # --- segment select: comparator sweep over sorted starts ---------------
-    sel = [jnp.full(x.shape, coef_ref[0, c], dtype=jnp.int32)
-           for c in range(order + 1)]
-    for s in range(1, num_segments):
-        ge = x >= starts_ref[s]
-        for c in range(order + 1):
-            sel[c] = jnp.where(ge, coef_ref[s, c], sel[c])
 
-    def trunc(v, sh):
-        if sh > 0:
-            if round_mults:
-                v = v + (1 << (sh - 1))
-            return jax.lax.shift_right_arithmetic(v, sh)
-        if sh < 0:
-            return jax.lax.shift_left(v, -sh)
-        return v
-
-    # --- Horner chain -------------------------------------------------------
-    h = trunc(sel[0] * x, shifts[0])
-    for i in range(1, order):
-        g = trunc(h, -up_g[i - 1]) + trunc(sel[i], -up_a[i - 1])
-        h = trunc(g * x, shifts[i])
-    out = trunc(h, -up_hb) + trunc(sel[order], -up_b)
-    out_ref[...] = trunc(out, down_out)
+def _ppa_kernel(x_ref, starts_ref, coef_ref, out_ref, *, plan: DatapathPlan,
+                num_segments: int):
+    """One (block_m, 128) tile: select coefficients, run the Horner chain."""
+    out_ref[...] = ppa_eval_block(x_ref[...], starts_ref, coef_ref, plan,
+                                  num_segments=num_segments)
 
 
 def ppa_eval_2d(
     x_int: jax.Array,
     starts: jax.Array,
     coefs: jax.Array,
+    plan: PlanLike,
     *,
-    w_in: int,
-    w_out: int,
-    w_a: Sequence[int],
-    w_o: Sequence[int],
-    w_b: int,
-    round_mults: bool = False,
     block: Tuple[int, int] = DEFAULT_BLOCK,
     interpret: bool = True,
 ) -> jax.Array:
     """Evaluate the PPA datapath on a 2D int32 array (pre-padded).
 
     Args:
-      x_int: (M, N) int32, FWL w_in; M % block[0] == 0, N % block[1] == 0.
-      starts: (S,) int32 sorted segment starts (FWL w_in).
+      x_int: (M, N) int32, FWL plan.w_in; M % block[0] == 0,
+        N % block[1] == 0.
+      starts: (S,) int32 sorted segment starts (FWL plan.w_in).
       coefs: (S, n+1) int32 — columns a_1..a_n then b.
+      plan: the DatapathPlan (or the FWLConfig to derive it from).
       interpret: run the kernel body in interpret mode (CPU validation);
         pass False on real TPU.
     """
-    order = len(w_a)
-    # precompute every alignment as compile-time constants
-    shifts = [w_a[0] + w_in - w_o[0]]
-    up_g, up_a = [], []
-    cur = w_o[0]
-    for i in range(1, order):
-        wg = max(cur, w_a[i])
-        up_g.append(wg - cur)
-        up_a.append(wg - w_a[i])
-        shifts.append(wg + w_in - w_o[i])
-        cur = w_o[i]
-    w_sum = max(cur, w_b)
-    up_hb, up_b = w_sum - cur, w_sum - w_b
-    down_out = w_sum - w_out
-
+    plan = as_plan(plan)
     m, n = x_int.shape
     s = starts.shape[0]
     grid = (m // block[0], n // block[1])
-    kernel = functools.partial(
-        _ppa_kernel, order=order, shifts=tuple(shifts), up_g=tuple(up_g),
-        up_a=tuple(up_a), up_hb=up_hb, up_b=up_b, down_out=down_out,
-        num_segments=s, round_mults=round_mults)
+    kernel = functools.partial(_ppa_kernel, plan=plan, num_segments=s)
 
     return pl.pallas_call(
         kernel,
@@ -127,7 +81,7 @@ def ppa_eval_2d(
         in_specs=[
             pl.BlockSpec(block, lambda i, j: (i, j)),
             pl.BlockSpec((s,), lambda i, j: (0,)),
-            pl.BlockSpec((s, order + 1), lambda i, j: (0, 0)),
+            pl.BlockSpec((s, plan.order + 1), lambda i, j: (0, 0)),
         ],
         out_specs=pl.BlockSpec(block, lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
@@ -136,17 +90,30 @@ def ppa_eval_2d(
       coefs.astype(jnp.int32))
 
 
+def pad_to_tiles(flat: jax.Array, block_m: int, block_n: int
+                 ) -> Tuple[jax.Array, Tuple[int, int]]:
+    """Zero-pad a flat array onto the (block_m, block_n) tile grid, growing
+    block_m from 8 up to ``block_m`` while the row count stays divisible.
+    Returns (x2d, (rows_block, block_n))."""
+    n = flat.shape[0]
+    bm, bn = 8, block_n
+    pad = (-n) % (bm * bn)
+    flat = jnp.pad(flat, (0, pad))
+    x2 = flat.reshape(-1, bn)
+    rows = x2.shape[0]
+    while bm < block_m and rows % (bm * 2) == 0:
+        bm *= 2
+    return x2, (bm, bn)
+
+
 def table_kernel_args(table: "PPATable"):
     """Derive the kernel operands straight from a compiled table artifact:
-    (starts, coefs, fwl_kwargs)."""
-    cfg = table.cfg
+    (starts, coefs, plan)."""
     starts = jnp.asarray(np.asarray(table.starts_int), jnp.int32)
     coefs = jnp.asarray(
         np.concatenate([np.asarray(table.a_int),
                         np.asarray(table.b_int)[:, None]], axis=1), jnp.int32)
-    kw = dict(w_in=cfg.w_in, w_out=cfg.w_out, w_a=tuple(cfg.w_a),
-              w_o=tuple(cfg.w_o), w_b=cfg.w_b, round_mults=cfg.round_mults)
-    return starts, coefs, kw
+    return starts, coefs, DatapathPlan.from_config(table.cfg)
 
 
 def ppa_eval_table(
@@ -159,23 +126,17 @@ def ppa_eval_table(
     """Evaluate a :class:`PPATable` artifact on integer inputs of any shape.
 
     The adapter between the store's artifact and the Pallas kernel: segment
-    starts, the coefficient ROM and every FWL shift constant are derived
-    from the table, and the input is flattened + zero-padded to the tile
-    grid (padding lanes are evaluated and discarded).  Bit-identical to the
+    starts, the coefficient ROM and the DatapathPlan are derived from the
+    table, and the input is flattened + zero-padded to the tile grid
+    (padding lanes are evaluated and discarded).  Bit-identical to the
     numpy golden model ``core.schemes.eval_table_int``.
     """
-    starts, coefs, kw = table_kernel_args(table)
+    starts, coefs, plan = table_kernel_args(table)
     x = jnp.asarray(x_int, jnp.int32)
     shape = x.shape
     flat = x.reshape(-1)
     n = flat.shape[0]
-    bm, bn = 8, block[1]
-    pad = (-n) % (bm * bn)
-    flat = jnp.pad(flat, (0, pad))
-    x2 = flat.reshape(-1, bn)
-    rows = x2.shape[0]
-    while bm < block[0] and rows % (bm * 2) == 0:  # grow rows while divisible
-        bm *= 2
-    out = ppa_eval_2d(x2, starts, coefs, block=(bm, bn),
-                      interpret=interpret, **kw)
+    x2, blk = pad_to_tiles(flat, block[0], block[1])
+    out = ppa_eval_2d(x2, starts, coefs, plan, block=blk,
+                      interpret=interpret)
     return out.reshape(-1)[:n].reshape(shape)

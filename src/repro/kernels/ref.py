@@ -1,71 +1,37 @@
-"""Pure-jnp oracle for the PPA kernel (and the default CPU execution path).
+"""Pure-jnp oracle for the PPA kernels (and the default CPU execution path).
 
-Bit-identical to kernels/ppa.py and to the numpy golden model
+The Horner chain is literally ``core.datapath.horner_body`` (the same code
+object the numpy golden model runs, here under jnp int32), driven by a
+:class:`~repro.core.datapath.DatapathPlan`; only the segment select differs
+from the Pallas kernels (a searchsorted gather instead of the comparator
+sweep).  Bit-identical to kernels/ppa.py and to the numpy golden model
 (core.schemes.eval_table_int); tests assert exact integer equality among
 all three.
 """
 
 from __future__ import annotations
 
-from typing import Sequence
-
 import jax
 import jax.numpy as jnp
 
+from repro.core.datapath import DatapathPlan, horner_body
 
-def horner_int(
-    sel: jax.Array,           # (..., n+1) selected coefficients
-    x_int: jax.Array,
-    *,
-    w_in: int,
-    w_out: int,
-    w_a: Sequence[int],
-    w_o: Sequence[int],
-    w_b: int,
-    round_mults: bool = False,
-) -> jax.Array:
-    """The fixed-point Horner datapath given pre-selected coefficients."""
-    order = len(w_a)
+
+def horner_int(sel: jax.Array, x_int: jax.Array, plan: DatapathPlan
+               ) -> jax.Array:
+    """The fixed-point Horner datapath given pre-selected coefficients
+    ``sel`` of shape (..., n+1)."""
     x = x_int.astype(jnp.int32)
-
-    def trunc(v, sh):
-        if sh > 0:
-            if round_mults:
-                v = v + (1 << (sh - 1))
-            return jax.lax.shift_right_arithmetic(v, sh)
-        if sh < 0:
-            return jax.lax.shift_left(v, -sh)
-        return v
-
-    h = trunc(sel[..., 0] * x, w_a[0] + w_in - w_o[0])
-    cur = w_o[0]
-    for i in range(1, order):
-        wg = max(cur, w_a[i])
-        g = trunc(h, cur - wg) + trunc(sel[..., i], w_a[i] - wg)
-        h = trunc(g * x, wg + w_in - w_o[i])
-        cur = w_o[i]
-    w_sum = max(cur, w_b)
-    out = trunc(h, cur - w_sum) + trunc(sel[..., order], w_b - w_sum)
-    return trunc(out, w_sum - w_out)
+    planes = [sel[..., i] for i in range(plan.order + 1)]
+    return horner_body(plan, planes, x)
 
 
-def ppa_eval_ref(
-    x_int: jax.Array,
-    starts: jax.Array,
-    coefs: jax.Array,
-    *,
-    w_in: int,
-    w_out: int,
-    w_a: Sequence[int],
-    w_o: Sequence[int],
-    w_b: int,
-    round_mults: bool = False,
-) -> jax.Array:
+def ppa_eval_ref(x_int: jax.Array, starts: jax.Array, coefs: jax.Array,
+                 plan: DatapathPlan) -> jax.Array:
     """Evaluate the PPA datapath on int32 inputs of any shape."""
     x = x_int.astype(jnp.int32)
     idx = jnp.clip(
         jnp.searchsorted(starts.astype(jnp.int32), x, side="right") - 1,
         0, starts.shape[0] - 1)
     sel = coefs.astype(jnp.int32)[idx]          # (..., n+1)
-    return horner_int(sel, x, w_in=w_in, w_out=w_out, w_a=w_a, w_o=w_o,
-                      w_b=w_b, round_mults=round_mults)
+    return horner_int(sel, x, plan)

@@ -8,6 +8,12 @@ Only the fractional power 2**f goes through the fixed-point PPA datapath
 float (exact ldexp / one division per row) — exactly the split a hardware
 softmax unit makes between the NAF core and the float post-scaler.
 
+The integer stage is the shared kernel body (comparator sweep +
+``core.datapath.horner_body``) driven by the table's
+:class:`~repro.core.datapath.DatapathPlan` — including the ``round_mults``
+half-ULP add, which a previous hand-rolled copy of the Horner chain here
+silently dropped (regression-tested in tests/test_backend_parity.py).
+
 Tiling: one block holds ``block_m`` full rows (block shape (block_m, N));
 row reductions stay inside the block so there is no cross-block revisit.
 For attention-sized rows (N <= 32k f32 = 128 KiB/row) block_m=8 keeps the
@@ -18,13 +24,15 @@ from __future__ import annotations
 
 import functools
 import math
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
+from repro.core.datapath import DatapathPlan
+
+from .body import ppa_eval_block
 from .ops import TableConsts
 
 __all__ = ["softmax_ppa_2d"]
@@ -33,11 +41,8 @@ _LOG2E = math.log2(math.e)
 _CLAMP = -24.0  # 2^-24 is below every table's output ULP
 
 
-def _softmax_kernel(x_ref, starts_ref, coef_ref, out_ref, *, order: int,
-                    shifts: Tuple[int, ...], up_g: Tuple[int, ...],
-                    up_a: Tuple[int, ...], up_hb: int, up_b: int,
-                    down_out: int, num_segments: int, w_in: int, w_out: int,
-                    valid_n: int):
+def _softmax_kernel(x_ref, starts_ref, coef_ref, out_ref, *,
+                    plan: DatapathPlan, num_segments: int, valid_n: int):
     x = x_ref[...].astype(jnp.float32)
     n = x.shape[-1]
     if valid_n < n:  # tail padding is masked out of max & sum
@@ -49,31 +54,13 @@ def _softmax_kernel(x_ref, starts_ref, coef_ref, out_ref, *, order: int,
     s = jnp.maximum((x - m) * np.float32(_LOG2E), np.float32(_CLAMP))
     k = jnp.floor(s)
     f = s - k                                              # in [0, 1)
-    f_int = jnp.floor(f * np.float32(1 << w_in) + 0.5).astype(jnp.int32)
-    f_int = jnp.clip(f_int, 0, (1 << w_in) - 1)
+    f_int = jnp.floor(f * np.float32(1 << plan.w_in) + 0.5).astype(jnp.int32)
+    f_int = jnp.clip(f_int, 0, (1 << plan.w_in) - 1)
 
-    # comparator sweep (same structure as kernels/ppa.py)
-    sel = [jnp.full(f_int.shape, coef_ref[0, c], dtype=jnp.int32)
-           for c in range(order + 1)]
-    for seg in range(1, num_segments):
-        ge = f_int >= starts_ref[seg]
-        for c in range(order + 1):
-            sel[c] = jnp.where(ge, coef_ref[seg, c], sel[c])
+    y_int = ppa_eval_block(f_int, starts_ref, coef_ref, plan,
+                           num_segments=num_segments)
 
-    def trunc(v, sh):
-        if sh > 0:
-            return jax.lax.shift_right_arithmetic(v, sh)
-        if sh < 0:
-            return jax.lax.shift_left(v, -sh)
-        return v
-
-    h = trunc(sel[0] * f_int, shifts[0])
-    for i in range(1, order):
-        g = trunc(h, -up_g[i - 1]) + trunc(sel[i], -up_a[i - 1])
-        h = trunc(g * f_int, shifts[i])
-    y_int = trunc(trunc(h, -up_hb) + trunc(sel[order], -up_b), down_out)
-
-    e = y_int.astype(jnp.float32) / np.float32(1 << w_out)
+    e = y_int.astype(jnp.float32) / np.float32(1 << plan.w_out)
     e = e * jnp.exp2(k)                                    # exact scale
     if valid_n < n:
         e = jnp.where(col < valid_n, e, 0.0)
@@ -91,24 +78,9 @@ def softmax_ppa_2d(x: jax.Array, tc: TableConsts, *, block_m: int = 8,
     xp = jnp.pad(x, ((0, pad_m), (0, pad_n)), constant_values=-jnp.inf)
     mp, np_ = xp.shape
 
-    order = len(tc.w_a)
-    shifts = [tc.w_a[0] + tc.w_in - tc.w_o[0]]
-    up_g, up_a = [], []
-    cur = tc.w_o[0]
-    for i in range(1, order):
-        wg = max(cur, tc.w_a[i])
-        up_g.append(wg - cur)
-        up_a.append(wg - tc.w_a[i])
-        shifts.append(wg + tc.w_in - tc.w_o[i])
-        cur = tc.w_o[i]
-    w_sum = max(cur, tc.w_b)
-
-    kernel = functools.partial(
-        _softmax_kernel, order=order, shifts=tuple(shifts),
-        up_g=tuple(up_g), up_a=tuple(up_a), up_hb=w_sum - cur,
-        up_b=w_sum - tc.w_b, down_out=w_sum - tc.w_out,
-        num_segments=tc.num_segments, w_in=tc.w_in, w_out=tc.w_out,
-        valid_n=n)
+    plan = tc.plan
+    kernel = functools.partial(_softmax_kernel, plan=plan,
+                               num_segments=tc.num_segments, valid_n=n)
 
     s = tc.num_segments
     out = pl.pallas_call(
@@ -117,7 +89,7 @@ def softmax_ppa_2d(x: jax.Array, tc: TableConsts, *, block_m: int = 8,
         in_specs=[
             pl.BlockSpec((block_m, np_), lambda i: (i, 0)),
             pl.BlockSpec((s,), lambda i: (0,)),
-            pl.BlockSpec((s, order + 1), lambda i: (0, 0)),
+            pl.BlockSpec((s, plan.order + 1), lambda i: (0, 0)),
         ],
         out_specs=pl.BlockSpec((block_m, np_), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),

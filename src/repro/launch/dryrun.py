@@ -76,6 +76,9 @@ VARIANTS = {
     # beyond-paper activation deployment modes (bit-exact; DESIGN.md §3)
     "lut_index": {"act_backend": "lut_index"},
     "lut_value": {"act_backend": "lut_value"},
+    # fused float->PPA->float activation kernel (one pallas_call, incl.
+    # silu/gelu gating; kernels/fused.py)
+    "fused": {"act_backend": "pallas_fused"},
     # flash-decode-style KV: cache seq-sharded, kv heads unpadded
     "kvseq": {"kv_shard": "seq"},
     # exact float activations (ablation: PPA overhead isolation)

@@ -26,7 +26,8 @@ import jax.numpy as jnp
 
 from repro.compiler import compile_or_load
 from repro.core import FWLConfig, PPAScheme
-from repro.kernels.ops import TableConsts, pack_table, ppa_act, ppa_softmax
+from repro.kernels.ops import (TableConsts, pack_table, ppa_act,
+                               ppa_gate_act, ppa_softmax)
 
 __all__ = ["ActBundle", "make_acts"]
 
@@ -99,10 +100,12 @@ def _ppa_bundle(bits: int, backend: str, store=None) -> ActBundle:
         return ppa_act(tnh, x, backend)
 
     def gelu(x):
-        return x * ppa_act(phi, x, backend)
+        # gated op: on the fused backend the x * Phi(x) multiply happens
+        # inside the kernel; identical float32 math on every other backend
+        return ppa_gate_act(phi, x, backend)
 
     def silu(x):
-        return x * ppa_act(sig, x, backend)
+        return ppa_gate_act(sig, x, backend)
 
     def softplus(x):
         return ppa_act(sp, x, backend)

@@ -43,7 +43,14 @@ class Request:
 class ServeEngine:
     def __init__(self, cfg: ModelCfg, params, *, n_slots: int = 4,
                  cache_len: int = 256, ctx: Optional[ShardCtx] = None,
-                 rng_seed: int = 0, table_store: Optional[TableStore] = None):
+                 rng_seed: int = 0, table_store: Optional[TableStore] = None,
+                 act_backend: Optional[str] = None):
+        # serving is the deployment hot path: ``act_backend`` overrides the
+        # model config's activation execution backend (e.g. "pallas_fused"
+        # to run quantize -> PPA -> dequantize -> gating in one kernel; see
+        # repro.kernels.ops.available_backends()).
+        if act_backend is not None and act_backend != cfg.act_backend:
+            cfg = dataclasses.replace(cfg, act_backend=act_backend)
         self.cfg = cfg
         self.params = params
         # PPA activation tables resolve through the store: an engine given

@@ -176,6 +176,79 @@ def test_ppa_eval_table_matches_numpy_golden(small_table):
     assert np.array_equal(y2, eval_table_int(small_table, x2))
 
 
+# -- memory-tier LRU bound + disk-tier prune ----------------------------------
+def test_store_memory_lru_eviction(tmp_path):
+    store = TableStore(tmp_path, max_entries=2)
+    store.compile_or_load("sigmoid", CFG, SCHEME)
+    store.compile_or_load("tanh", CFG, SCHEME)
+    # access sigmoid -> tanh becomes the LRU entry
+    store.compile_or_load("sigmoid", CFG, SCHEME)
+    store.compile_or_load("exp2_frac", CFG, SCHEME)   # evicts tanh
+    assert store.stats()["in_memory"] == 2
+    assert store.evictions == 1
+    # evicted entry re-loads from disk, never recompiles
+    sess = CompilerSession()
+    store.compile_or_load("tanh", CFG, SCHEME, session=sess)
+    assert sess.counters()["calls"] == 0
+    assert store.hits_disk == 1
+
+
+def test_store_lru_refresh_on_hit(tmp_path):
+    store = TableStore(tmp_path, max_entries=2)
+    a = store.compile_or_load("sigmoid", CFG, SCHEME)
+    store.compile_or_load("tanh", CFG, SCHEME)
+    store.compile_or_load("sigmoid", CFG, SCHEME)     # refresh a's slot
+    store.compile_or_load("exp2_frac", CFG, SCHEME)
+    # sigmoid survived because the hit moved it to most-recently-accessed
+    sess = CompilerSession()
+    b = store.compile_or_load("sigmoid", CFG, SCHEME, session=sess)
+    assert store.hits_disk == 0 and sess.counters()["calls"] == 0
+    assert _tables_equal(a, b)
+
+
+def test_store_max_entries_validation(tmp_path):
+    with pytest.raises(ValueError):
+        TableStore(tmp_path, max_entries=0)
+
+
+def test_store_prune_by_count_and_age(tmp_path):
+    import os
+    import time
+    store = TableStore(tmp_path)
+    store.compile_or_load("sigmoid", CFG, SCHEME)
+    store.compile_or_load("tanh", CFG, SCHEME)
+    store.compile_or_load("exp2_frac", CFG, SCHEME)
+    files = sorted(tmp_path.glob("*.json"))
+    assert len(files) == 3
+    # age the first artifact, keep the others fresh
+    old = time.time() - 1000
+    os.utime(files[0], (old, old))
+    removed = store.prune(max_age_s=500)
+    assert removed == [files[0]]
+    # count bound: keep only the most-recently-accessed artifact
+    removed = store.prune(max_files=1)
+    assert len(removed) == 1
+    assert len(list(tmp_path.glob("*.json"))) == 1
+    # no-op without criteria
+    assert store.prune() == []
+    # pruned artifacts recompile on demand (store still correct)
+    tab = store.compile_or_load("sigmoid", CFG, SCHEME)
+    assert tab.num_segments > 0
+
+
+def test_store_disk_hit_refreshes_last_access(tmp_path):
+    import os
+    store = TableStore(tmp_path)
+    store.compile_or_load("sigmoid", CFG, SCHEME)
+    path = next(tmp_path.glob("*.json"))
+    old = 1_000_000.0
+    os.utime(path, (old, old))
+    fresh = TableStore(tmp_path)              # new process's view
+    fresh.compile_or_load("sigmoid", CFG, SCHEME)
+    assert fresh.hits_disk == 1
+    assert path.stat().st_mtime > old         # read refreshed last-access
+
+
 def test_compile_or_load_default_store_roundtrip(tmp_path, monkeypatch):
     monkeypatch.setenv("REPRO_TABLE_CACHE", str(tmp_path))
     import repro.compiler.store as store_mod

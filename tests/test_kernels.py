@@ -50,12 +50,11 @@ def test_pallas_matches_ref_and_golden(which, shape, request):
     lo, hi = int(tab.starts_int[0]), int((1 << tab.cfg.w_in)) - 1
     x = rng.integers(lo, hi + 1, size=shape).astype(np.int32)
 
-    kw = dict(w_in=tc.w_in, w_out=tc.w_out, w_a=tc.w_a, w_o=tc.w_o,
-              w_b=tc.w_b)
-    y_ref = np.asarray(ppa_eval_ref(jnp.asarray(x), tc.starts, tc.coefs, **kw))
+    y_ref = np.asarray(ppa_eval_ref(jnp.asarray(x), tc.starts, tc.coefs,
+                                    tc.plan))
     bm = shape[0] if shape[0] in (8, 16, 24, 256) else 8
     y_pal = np.asarray(ppa_eval_2d(jnp.asarray(x), tc.starts, tc.coefs,
-                                   block=(min(bm, 8), 128), **kw))
+                                   tc.plan, block=(min(bm, 8), 128)))
     y_gold = eval_table_int(tab, x.astype(np.int64))
     np.testing.assert_array_equal(y_ref, y_gold)
     np.testing.assert_array_equal(y_pal, y_gold)
@@ -68,9 +67,8 @@ def test_ref_matches_golden_random_shapes(seed, shape):
     tc = pack_table(tab)
     rng = np.random.default_rng(seed)
     x = rng.integers(0, 1 << tab.cfg.w_in, size=shape).astype(np.int32)
-    y_ref = np.asarray(ppa_eval_ref(
-        jnp.asarray(x), tc.starts, tc.coefs, w_in=tc.w_in, w_out=tc.w_out,
-        w_a=tc.w_a, w_o=tc.w_o, w_b=tc.w_b))
+    y_ref = np.asarray(ppa_eval_ref(jnp.asarray(x), tc.starts, tc.coefs,
+                                    tc.plan))
     np.testing.assert_array_equal(y_ref, eval_table_int(tab, x))
 
 
@@ -85,10 +83,12 @@ def test_pallas_backend_through_ppa_apply(tab8):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
-@pytest.mark.parametrize("backend", ["lut_index", "lut_value"])
+@pytest.mark.parametrize("backend",
+                         ["lut_index", "lut_value", "pallas_fused_interpret"])
 @pytest.mark.parametrize("which", ["tab8", "tab16"])
 def test_lut_backends_bit_exact(which, backend, request):
-    """The beyond-paper LUT deployment modes match the datapath exactly."""
+    """The beyond-paper LUT/fused deployment modes match the datapath
+    exactly."""
     tab = request.getfixturevalue(which)
     tc = pack_table(tab)
     rng = np.random.default_rng(5)

@@ -80,3 +80,34 @@ def test_engine_slot_reuse_no_crosstalk():
     eng.submit(mine)
     eng.run_until_drained()
     assert mine.output == ref.output
+
+
+def test_engine_fused_act_backend_matches_ref():
+    """Serving with the fused float->PPA->float kernel (one pallas_call per
+    activation) produces exactly the greedy tokens of the unfused ref
+    backend — the deployment hot path is bit-identical, just fused."""
+    import dataclasses
+    cfg, params = _setup()
+    cfg = dataclasses.replace(cfg, act_impl="ppa", act_backend="ref")
+    rng = np.random.default_rng(3)
+    reqs = lambda: [Request(rid=i,
+                            prompt=rng.integers(0, cfg.vocab, 8
+                                                ).astype(np.int32),
+                            max_new_tokens=4) for i in range(2)]
+    rng = np.random.default_rng(3)
+    a = reqs()
+    ref_eng = ServeEngine(cfg, params, n_slots=2, cache_len=48)
+    for r in a:
+        ref_eng.submit(r)
+    ref_eng.run_until_drained()
+    assert ref_eng.cfg.act_backend == "ref"
+
+    rng = np.random.default_rng(3)
+    b = reqs()
+    fused_eng = ServeEngine(cfg, params, n_slots=2, cache_len=48,
+                            act_backend="pallas_fused_interpret")
+    assert fused_eng.cfg.act_backend == "pallas_fused_interpret"
+    for r in b:
+        fused_eng.submit(r)
+    fused_eng.run_until_drained()
+    assert [r.output for r in b] == [r.output for r in a]
