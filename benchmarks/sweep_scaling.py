@@ -1,0 +1,88 @@
+"""Sweep-scaling harness: jobs/sec at 1, 2 and 4 simulated hosts.
+
+Runs the same design-space grid through ``repro.compiler.sweep`` with the
+job list sharded across N simulated hosts (each with its own store
+directory — the separate-filesystems rendezvous case), then merges the
+shards.  Per N it reports:
+
+  * per-shard wall time and the simulated sweep wall (the slowest shard —
+    shards are independent hosts, so the sweep finishes when the last one
+    does) and jobs/sec against that wall,
+  * the compile counters (every unique key must compile exactly once
+    across all shards), and
+  * bit-identity of the merged store against a single-host serial compile
+    of the same job list — the rendezvous acceptance check.
+
+``--smoke`` shrinks the grid to the CI shape (seconds); it is wired into
+``scripts/ci.sh sweep-smoke``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import tempfile
+from pathlib import Path
+
+from repro.compiler import TableStore, compile_batch, paper_grid
+from repro.compiler.sweep import simulate_hosts
+from benchmarks.common import emit
+
+
+def store_files(root: Path) -> dict:
+    """Artifact filename -> bytes for a store dir (manifests excluded)."""
+    return {p.name: p.read_bytes() for p in sorted(root.glob("*.json"))}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny 7-bit grid (CI shape)")
+    ap.add_argument("--nafs", nargs="*", default=None)
+    ap.add_argument("--hosts", nargs="*", type=int, default=(1, 2, 4))
+    ap.add_argument("--processes", type=int, default=1,
+                    help="per-host compile_batch pool (1 = serial)")
+    args = ap.parse_args(argv)
+
+    preset = "smoke" if args.smoke else "paper"
+    jobs = paper_grid(preset, nafs=args.nafs)
+    n_unique = len({j.key() for j in jobs})
+    emit("sweep_scaling/grid", 0.0, preset=preset, jobs=len(jobs),
+         unique=n_unique)
+
+    with tempfile.TemporaryDirectory() as td:
+        root = Path(td)
+        # single-host serial reference — the bit-identity baseline
+        ref_dir = root / "serial"
+        ref_store = TableStore(ref_dir)
+        import time
+        t0 = time.monotonic()
+        compile_batch(jobs, store=ref_store, processes=1)
+        serial_s = time.monotonic() - t0
+        ref = store_files(ref_dir)
+        emit("sweep_scaling/serial", serial_s * 1e6,
+             jobs_per_s=f"{n_unique / serial_s:.2f}",
+             compiles=ref_store.compiles)
+
+        ok = True
+        for n in args.hosts:
+            merged, reports, stats = simulate_hosts(
+                jobs, hosts=n, root=root / f"sim{n}",
+                processes=args.processes)
+            wall = max(r.wall_s for r in reports)
+            compiles = sum(len(r.compiled) for r in reports)
+            got = store_files(merged.root)
+            identical = got == ref
+            ok &= identical and compiles == n_unique
+            emit(f"sweep_scaling/hosts{n}", wall * 1e6,
+                 jobs_per_s=f"{n_unique / wall:.2f}",
+                 speedup=f"{serial_s / wall:.2f}x",
+                 shard_jobs="/".join(str(len(r.keys)) for r in reports),
+                 compiles=compiles, imported=stats.get("imported", 0),
+                 bit_identical=identical)
+        emit("sweep_scaling/ok", 0.0, value=ok)
+        return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -3,13 +3,17 @@
 #
 #   scripts/ci.sh         tier-1: the full suite, fail-fast (the command
 #                         ROADMAP.md pins as the repo's verify gate)
-#   scripts/ci.sh fast    quick iteration subset: skip the slow paper-table
-#                         compiles and the dry-run mesh tests
+#   scripts/ci.sh fast    quick iteration tier: everything but the slow
+#                         paper-table / order-2 compiles (-m "not slow")
 #   scripts/ci.sh bench-smoke
 #                         kernel-layer benchmark in tiny dry-run shape:
 #                         fused + unfused + Pallas paths must run and stay
 #                         bit-exact, so kernel regressions fail CI rather
 #                         than only the offline benchmark
+#   scripts/ci.sh sweep-smoke
+#                         2-host design-space sweep in the 7-bit CI shape:
+#                         shard -> merge must be bit-identical to a serial
+#                         compile with every key compiled exactly once
 #
 # Extra args after the mode are forwarded to pytest, e.g.
 #   scripts/ci.sh fast -k compiler
@@ -25,7 +29,10 @@ case "$mode" in
     exec python -m pytest -x -q "$@"
     ;;
   fast)
-    exec python -m pytest -q -m "not slow and not dryrun" "$@"
+    exec python -m pytest -q -m "not slow" "$@"
+    ;;
+  sweep-smoke)
+    exec python -m benchmarks.sweep_scaling --smoke --hosts 1 2 "$@"
     ;;
   bench-smoke)
     out="$(python -m benchmarks.kernel_throughput --smoke)" || exit 1
@@ -35,7 +42,8 @@ case "$mode" in
     esac
     ;;
   *)
-    echo "usage: scripts/ci.sh [tier1|fast|bench-smoke] [pytest args...]" >&2
+    echo "usage: scripts/ci.sh [tier1|fast|bench-smoke|sweep-smoke]" \
+         "[extra args...]" >&2
     exit 2
     ;;
 esac

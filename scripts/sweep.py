@@ -1,0 +1,114 @@
+#!/usr/bin/env python
+"""Multi-host design-space sweep CLI over the TableStore rendezvous.
+
+Enumerates the paper's Tables I-VII x NAF-zoo grid as ``CompileJob``s and
+runs *this host's* shard of it.  Sharding is deterministic store-key
+hashing, so N hosts each running
+
+    python scripts/sweep.py --hosts N --host-id i --store /shard/i
+
+cover the grid exactly once with no coordinator.  The run is resumable
+(store lookup before compile; re-run after a kill and only missing keys
+compile) and lease-coordinated (claim files; ``--claim-ttl`` lets a
+survivor take over a dead host's stale claims on a shared store).  Each
+run writes a ``host<i>.manifest`` that ``--merge-from`` reconciles:
+
+    python scripts/sweep.py --store /merged --merge-from /shard/0 /shard/1
+
+merges shard directories into a store bit-identical to a single-host
+serial compile of the same grid.
+
+Examples:
+    scripts/sweep.py --list                        # show the grid
+    scripts/sweep.py --preset smoke --hosts 2 --host-id 0 --store /tmp/s0
+    scripts/sweep.py --tables t1 t2 --nafs sigmoid tanh --store /tmp/full
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from repro.compiler import TableStore, merge_shards, paper_grid, run_shard
+from repro.compiler.sweep import shard_jobs
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        description=__doc__, formatter_class=argparse.RawDescriptionHelpFormatter)
+    p.add_argument("--preset", choices=("paper", "smoke"), default="paper")
+    p.add_argument("--tables", nargs="*", default=None, metavar="tN",
+                   help="restrict to table templates (t1..t7)")
+    p.add_argument("--nafs", nargs="*", default=None,
+                   help="restrict the NAF zoo")
+    p.add_argument("--limit", type=int, default=None,
+                   help="truncate the grid (debugging)")
+    p.add_argument("--hosts", type=int, default=1)
+    p.add_argument("--host-id", type=int, default=0)
+    p.add_argument("--store", type=Path, default=None,
+                   help="store directory (default: REPRO_TABLE_CACHE)")
+    p.add_argument("--processes", type=int, default=None,
+                   help="compile_batch pool size (1 = serial)")
+    p.add_argument("--claim-ttl", type=float, default=None, metavar="SEC",
+                   help="take over claims staler than SEC (default: defer)")
+    p.add_argument("--owner", default=None,
+                   help="claim owner tag (default host:pid)")
+    p.add_argument("--merge-from", nargs="*", type=Path, default=None,
+                   metavar="DIR", help="merge shard dirs into --store "
+                   "instead of compiling")
+    p.add_argument("--list", action="store_true",
+                   help="print this host's shard of the grid and exit")
+    p.add_argument("--json", action="store_true", dest="as_json",
+                   help="machine-readable report on stdout")
+    return p
+
+
+def main(argv=None) -> int:
+    args = build_parser().parse_args(argv)
+    store = TableStore(args.store) if args.store else TableStore()
+
+    if args.merge_from is not None:     # merge needs no grid enumeration
+        stats = merge_shards(store, args.merge_from)
+        out = {"mode": "merge", "store": str(store.root), "stats": stats}
+        print(json.dumps(out) if args.as_json else
+              f"[sweep] merged {len(args.merge_from)} shard dir(s) into "
+              f"{store.root}: {stats}")
+        return 0
+
+    jobs = paper_grid(args.preset, nafs=args.nafs, tables=args.tables)
+    if args.limit is not None:
+        jobs = jobs[:args.limit]
+    if args.list:
+        mine = shard_jobs(jobs, args.hosts, args.host_id)
+        for key, job in mine:
+            print(f"{key}  {job.naf:<12} {job.scheme.tag:<14} "
+                  f"w{job.cfg.w_in}->w{job.cfg.w_out}")
+        print(f"[sweep] shard {args.host_id}/{args.hosts}: {len(mine)} of "
+              f"{len(jobs)} unique jobs")
+        return 0
+
+    report = run_shard(jobs, hosts=args.hosts, host_id=args.host_id,
+                       store=store, processes=args.processes,
+                       claim_ttl_s=args.claim_ttl, owner=args.owner)
+    if args.as_json:
+        print(json.dumps(dataclass_dict(report)))
+    else:
+        print(f"[sweep] shard {report.host_id}/{report.hosts} on "
+              f"{store.root}: {len(report.compiled)} compiled, "
+              f"{len(report.loaded)} resumed from store, "
+              f"{len(report.deferred)} deferred (live claims), "
+              f"{len(report.taken_over)} stale claims taken over "
+              f"in {report.wall_s:.1f}s -> {report.manifest_name}")
+    # deferred keys mean the sweep is not complete from this host's view
+    return 0 if not report.deferred else 3
+
+
+def dataclass_dict(report):
+    import dataclasses
+    return dataclasses.asdict(report)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,30 @@
+"""Version-compatibility shims for the jax API surface we depend on.
+
+``shard_map`` has moved twice: ``jax.experimental.shard_map.shard_map``
+(with ``check_rep``) -> ``jax.shard_map`` (with ``check_vma``).  Every
+call site in the repo (and in the subprocess test bodies) imports the one
+wrapper below, which targets whichever spelling the installed jax
+provides.  The wrapper exposes the *new* keyword (``check_vma``) and
+translates it for old installs, so call sites are written against the
+current API and keep working on both.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["shard_map"]
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` on new jax, ``jax.experimental.shard_map`` on old.
+
+    ``check_vma`` maps onto the legacy ``check_rep`` flag — both gate the
+    same replication/varying-manual-axes verification pass.
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _legacy
+    return _legacy(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                   check_rep=check_vma)

@@ -13,6 +13,9 @@ Pallas kernels, the jnp reference ops and the serving engine).  Pieces:
     memory+disk artifact store; tables are deployment artifacts, compiled
     once and shared by the whole stack.
   * :func:`compile_batch` — multi-process fan-out for independent jobs.
+  * :mod:`sweep` — multi-host design-space sweeps: deterministic key-hash
+    sharding, claim-file leasing, shard manifests, and
+    :meth:`TableStore.merge` as the cross-host rendezvous.
 """
 
 from .batch import compile_batch
@@ -20,6 +23,8 @@ from .compile import CompilerSession, compile_table, resolve_defaults
 from .memo import MemoizedSegmentEvaluator
 from .store import (CompileJob, TableStore, cache_dir, compile_or_load,
                     default_store, set_default_store)
+from .sweep import (ShardReport, merge_shards, paper_grid, run_shard,
+                    shard_jobs, shard_of, simulate_hosts)
 
 __all__ = [
     "MemoizedSegmentEvaluator",
@@ -27,4 +32,6 @@ __all__ = [
     "CompileJob", "TableStore", "cache_dir", "compile_or_load",
     "default_store", "set_default_store",
     "compile_batch",
+    "ShardReport", "merge_shards", "paper_grid", "run_shard",
+    "shard_jobs", "shard_of", "simulate_hosts",
 ]

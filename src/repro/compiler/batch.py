@@ -71,6 +71,7 @@ def compile_batch(jobs: Sequence[CompileJob], *,
     for idxs, js in zip(todo.values(), results):
         tab = PPATable.from_json(js)
         store.misses += 1
+        store.compiles += 1
         store.put(jobs[idxs[0]], tab)
         for i in idxs:
             out[i] = tab

@@ -22,7 +22,7 @@ import json
 import os
 import time
 from pathlib import Path
-from typing import Dict, List, Optional, Tuple
+from typing import ClassVar, Dict, List, Optional, Tuple
 
 from repro.core.datapath import FWLConfig
 from repro.core.schemes import PPAScheme, PPATable
@@ -47,6 +47,13 @@ def cache_dir() -> Path:
 @dataclasses.dataclass(frozen=True)
 class CompileJob:
     """One independent compile request — the store's addressing unit."""
+
+    #: Compile-semantics version, baked into every store key and every
+    #: sweep-shard manifest.  Bump it whenever compile *results* can change
+    #: (ROADMAP "key-version sweeping"); merge() refuses manifests written
+    #: at a different version, so a cross-host rendezvous never mixes
+    #: artifacts from incompatible compilers.
+    VERSION: ClassVar[int] = 3
 
     naf: str
     cfg: FWLConfig
@@ -74,7 +81,8 @@ class CompileJob:
             "naf": job.naf, "cfg": job.cfg.as_dict(),
             "scheme": dataclasses.asdict(job.scheme),
             "mae_t": job.mae_t, "interval": list(job.interval),
-            "tseg": job.tseg, "final_mode": job.final_mode, "v": 3,
+            "tseg": job.tseg, "final_mode": job.final_mode,
+            "v": self.VERSION,
         }, sort_keys=True)
         return hashlib.sha1(blob.encode()).hexdigest()[:16]
 
@@ -110,6 +118,7 @@ class TableStore:
         self.hits_disk = 0
         self.misses = 0
         self.evictions = 0
+        self.compiles = 0       # actual compiler runs charged to this store
 
     @property
     def root(self) -> Path:
@@ -169,6 +178,19 @@ class TableStore:
         job = job.resolved()
         return self._lookup(job, job.key())
 
+    def contains(self, job: CompileJob) -> bool:
+        """Existence probe: no JSON parse, no memory-tier insertion.
+
+        For callers that only classify keys (sweep resume) — a stored
+        paper-grid shard would otherwise be fully parsed and pinned in
+        the memory tier just to be counted.
+        """
+        job = job.resolved()
+        key = job.key()
+        if key in self._mem:
+            return True
+        return self.persist and self._path(job, key).exists()
+
     def put(self, job: CompileJob, table: PPATable) -> None:
         job = job.resolved()
         self._put(job, job.key(), table)
@@ -190,9 +212,150 @@ class TableStore:
         if tab is not None:
             return tab
         self.misses += 1
+        self.compiles += 1
         tab = job.compile(session)
         self._put(job, key, tab)
         return tab
+
+    # -- claim-file leasing ----------------------------------------------------
+    # Hosts racing on one key (a shared store directory, or a takeover of a
+    # dead host's shard) coordinate through <key>.claim files next to the
+    # artifacts.  A claim is a lease, not a lock: acquisition is atomic
+    # (O_EXCL), but a claim older than the caller's ttl is considered
+    # abandoned and may be taken over.  Two hosts may both win a takeover
+    # race in pathological cases — that costs one duplicate compile, never
+    # correctness, because puts are content-addressed and idempotent.
+
+    def _claim_path(self, key: str) -> Path:
+        return self.root / f"{key}.claim"
+
+    def claim_info(self, key: str) -> Optional[Dict]:
+        """The current claim on ``key`` (owner/pid/time), or None."""
+        try:
+            return json.loads(self._claim_path(key).read_text())
+        except (OSError, ValueError):
+            return None
+
+    def try_claim(self, key: str, *, owner: str,
+                  ttl_s: Optional[float] = None) -> bool:
+        """Acquire (or refresh) the compile lease on ``key``.
+
+        Returns True if this caller now holds the claim (fresh acquisition,
+        refresh of its own claim, or takeover of a claim staler than
+        ``ttl_s``).  Returns False while another owner's claim is live.
+        Acquisition is name+content atomic (hard-link of a fully-written
+        tmp file), so a concurrent reader never observes a half-written
+        claim it could misjudge as abandoned.
+        """
+        path = self._claim_path(key)
+        blob = json.dumps({"key": key, "owner": owner, "pid": os.getpid(),
+                           "time": time.time()})
+        tmp = path.with_suffix(f".{os.getpid()}.claimtmp")
+        tmp.write_text(blob)
+        try:
+            os.link(tmp, path)
+        except FileExistsError:
+            cur = self.claim_info(key)
+            if cur is not None and cur.get("owner") == owner:
+                pass        # our own claim: refresh the lease timestamp
+            elif cur is not None and (
+                    ttl_s is None
+                    or time.time() - cur.get("time", 0.0) <= ttl_s):
+                tmp.unlink(missing_ok=True)
+                return False    # live claim held by someone else
+            elif cur is None:
+                # unreadable claim: only age it by file mtime, never
+                # steal it outright (ttl_s=None means never take over)
+                try:
+                    age = time.time() - path.stat().st_mtime
+                except OSError:
+                    age = float("inf")      # vanished: fall through, retake
+                if ttl_s is None or age <= ttl_s:
+                    tmp.unlink(missing_ok=True)
+                    return False
+            os.replace(tmp, path)   # stale: take the lease over atomically
+            return True
+        tmp.unlink(missing_ok=True)
+        return True
+
+    def release_claim(self, key: str, *, owner: Optional[str] = None) -> None:
+        """Drop the lease on ``key``.
+
+        With ``owner`` given, only a claim still held by that owner is
+        removed — a host whose lease was taken over must not delete the
+        new holder's live claim.
+        """
+        if owner is not None:
+            cur = self.claim_info(key)
+            if cur is not None and cur.get("owner") != owner:
+                return
+        self._claim_path(key).unlink(missing_ok=True)
+
+    # -- cross-host rendezvous -------------------------------------------------
+    def merge(self, other_dir: "str | Path", *,
+              require_manifest: bool = False) -> Dict[str, int]:
+        """Import a foreign store directory (a sweep shard's rendezvous).
+
+        Shard manifests (``*.manifest``, written by
+        :func:`repro.compiler.sweep.run_shard`) are reconciled first: a
+        manifest names the keys its shard produced and the
+        ``CompileJob.VERSION`` it compiled under — entries from a different
+        version are refused (``skipped_version``), so stores never mix
+        artifacts with incompatible compile semantics.  Artifact files not
+        covered by any manifest are imported by filename-parsed key unless
+        ``require_manifest`` is set.  Keys already present locally are
+        skipped; copies are atomic and byte-identical (content-addressed
+        keys make this a true union).  Returns counters.
+        """
+        other = Path(other_dir)
+        stats = {"imported": 0, "skipped_present": 0, "skipped_version": 0,
+                 "skipped_invalid": 0, "skipped_unmanifested": 0}
+        manifested: Dict[str, str] = {}     # filename -> key
+        refused: set = set()                # filenames under a refused manifest
+        for mpath in sorted(other.glob("*.manifest")):
+            try:
+                man = json.loads(mpath.read_text())
+            except (OSError, ValueError):
+                stats["skipped_invalid"] += 1
+                continue
+            if man.get("v") != CompileJob.VERSION:
+                refused.update(man.get("keys", {}).values())
+                continue
+            for key, fname in man.get("keys", {}).items():
+                manifested[fname] = key
+        # a file vouched for by a current-version manifest stays importable
+        # even if some other (refused) manifest also names it
+        refused -= set(manifested)
+        for path in sorted(other.glob("*.json")):
+            if path.name in manifested:
+                key = manifested[path.name]
+            elif path.name in refused:
+                # compiled under a different CompileJob.VERSION: never
+                # imported, manifest required or not — mixed-version
+                # stores would break the bit-identity guarantee
+                stats["skipped_version"] += 1
+                continue
+            elif require_manifest:
+                stats["skipped_unmanifested"] += 1
+                continue
+            else:
+                key = path.stem.rsplit("-", 1)[-1]
+            if (self.root / path.name).exists():
+                stats["skipped_present"] += 1
+                continue
+            try:
+                text = path.read_text()
+                PPATable.from_json(text)    # refuse corrupt artifacts
+            except (OSError, ValueError, KeyError):
+                stats["skipped_invalid"] += 1
+                continue
+            dst = self.root / path.name
+            tmp = dst.with_suffix(f".{os.getpid()}.tmp")
+            tmp.write_text(text)
+            os.replace(tmp, dst)            # atomic, like _put
+            self._mem.pop(key, None)        # force re-read if cached stale
+            stats["imported"] += 1
+        return stats
 
     # -- disk-tier GC ----------------------------------------------------------
     def prune(self, *, max_files: Optional[int] = None,
@@ -233,7 +396,7 @@ class TableStore:
     def stats(self) -> Dict[str, int]:
         return {"hits_mem": self.hits_mem, "hits_disk": self.hits_disk,
                 "misses": self.misses, "in_memory": len(self._mem),
-                "evictions": self.evictions}
+                "evictions": self.evictions, "compiles": self.compiles}
 
 
 _DEFAULT: Optional[TableStore] = None

@@ -1,0 +1,299 @@
+"""Multi-host design-space sweep orchestration over the TableStore.
+
+The paper's full-space search is a design-space sweep: Tables I-VII walk
+(naf x FWL x scheme x segment-budget) points, and every point is an
+independent :class:`CompileJob`.  TBW tames the *per-point* cost; this
+module scales the *sweep*: jobs are partitioned across hosts by
+deterministic store-key hashing, each host runs its shard through
+``compile_batch``'s process pool against its own (or a shared) store, and
+the content-addressed on-disk tier is the rendezvous — shard directories
+merge with :meth:`TableStore.merge` into a store bit-identical to a
+single-host serial compile.
+
+Coordination primitives:
+
+  * **Sharding** — ``shard_of(key, hosts)`` hashes the content address, so
+    any host can compute the full partition with no coordinator and a key
+    always lands on the same shard (resume a killed host by re-running its
+    ``host_id``; already-stored keys are skipped by store lookup).
+  * **Claim leasing** — before compiling, a host leases each key with a
+    ``<key>.claim`` file (atomic O_EXCL).  Live claims defer the key
+    (another host is compiling it — only possible on a shared store dir);
+    claims staler than ``claim_ttl_s`` are taken over, which is how a
+    surviving host finishes a dead host's keys.
+  * **Manifests** — each shard run writes ``host<i>.manifest`` naming the
+    keys it covered and the ``CompileJob.VERSION`` it compiled under;
+    ``merge`` reconciles manifests first and refuses version mismatches.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import socket
+import time
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.datapath import FWLConfig
+from repro.core.functions import NAF_REGISTRY
+from repro.core.schemes import PPAScheme
+
+from .batch import compile_batch
+from .store import CompileJob, TableStore
+
+__all__ = ["shard_of", "shard_jobs", "ShardReport", "run_shard",
+           "merge_shards", "simulate_hosts", "default_owner", "paper_grid"]
+
+
+def default_owner() -> str:
+    return f"{socket.gethostname()}:{os.getpid()}"
+
+
+# ------------------------------------------------------------- partitioning
+def shard_of(key: str, hosts: int) -> int:
+    """Deterministic shard for a store key (hex content address)."""
+    return int(key, 16) % hosts
+
+
+def shard_jobs(jobs: Sequence[CompileJob], hosts: int, host_id: int
+               ) -> List[Tuple[str, CompileJob]]:
+    """This host's (key, job) shard, deduplicated by key, order-stable.
+
+    Every host computes the same partition from the job list alone —
+    there is no coordinator to disagree with.
+    """
+    if not 0 <= host_id < hosts:
+        raise ValueError(f"host_id {host_id} not in [0, {hosts})")
+    mine: Dict[str, CompileJob] = {}
+    for job in jobs:
+        key = job.key()
+        if shard_of(key, hosts) == host_id and key not in mine:
+            mine[key] = job
+    return list(mine.items())
+
+
+# --------------------------------------------------------------- shard run
+@dataclasses.dataclass
+class ShardReport:
+    """What one ``run_shard`` call did — also serialized as the manifest."""
+
+    host_id: int
+    hosts: int
+    owner: str
+    keys: Dict[str, str]                # key -> artifact filename (covered)
+    compiled: List[str]                 # keys this run actually compiled
+    loaded: List[str]                   # keys found in the store (resume)
+    deferred: List[str]                 # keys under another host's live claim
+    taken_over: List[str]               # stale claims this run took over
+    wall_s: float
+
+    @property
+    def manifest_name(self) -> str:
+        return f"host{self.host_id:03d}.manifest"
+
+
+def run_shard(jobs: Sequence[CompileJob], *,
+              hosts: int = 1,
+              host_id: int = 0,
+              store: Optional[TableStore] = None,
+              processes: Optional[int] = None,
+              claim_ttl_s: Optional[float] = None,
+              owner: Optional[str] = None) -> ShardReport:
+    """Compile this host's shard of ``jobs`` into ``store``; idempotent.
+
+    Resume semantics: keys already in the store (memory or disk tier) are
+    never recompiled, so re-running a killed shard only pays for what is
+    missing.  Keys under another owner's live claim are *deferred* (listed
+    in the report, not compiled — re-run to pick them up once the claim is
+    released or goes stale); claims staler than ``claim_ttl_s`` are taken
+    over.  Compiles run in pool-width waves: each key's lease is refreshed
+    before its wave starts and released (ownership-checked) as soon as its
+    wave lands, so ``claim_ttl_s`` needs to cover one *wave* of compiles,
+    not the whole shard.  A manifest covering every key this shard now has
+    in the store is written for :meth:`TableStore.merge` to reconcile.
+    """
+    store = store if store is not None else TableStore()
+    owner = owner or default_owner()
+    t0 = time.monotonic()
+    mine = shard_jobs(jobs, hosts, host_id)
+
+    loaded: List[str] = []
+    deferred: List[str] = []
+    taken_over: List[str] = []
+    to_compile: List[Tuple[str, CompileJob]] = []
+    for key, job in mine:
+        if store.contains(job):
+            loaded.append(key)
+            continue
+        had_claim = store.claim_info(key) is not None
+        if not store.try_claim(key, owner=owner, ttl_s=claim_ttl_s):
+            deferred.append(key)
+            continue
+        if had_claim:
+            taken_over.append(key)
+        to_compile.append((key, job))
+
+    width = processes if processes and processes > 0 else \
+        (os.cpu_count() or 1)
+    released: set = set()
+    try:
+        for i in range(0, len(to_compile), width):
+            # refresh every lease this run still holds: the timestamp
+            # tracks this host being alive, not the shard's start time
+            for key, _ in to_compile[i:]:
+                store.try_claim(key, owner=owner, ttl_s=claim_ttl_s)
+            wave = to_compile[i:i + width]
+            compile_batch([job for _, job in wave], store=store,
+                          processes=processes)
+            for key, _ in wave:
+                store.release_claim(key, owner=owner)
+                released.add(key)
+    finally:
+        for key, _ in to_compile:
+            if key not in released:
+                store.release_claim(key, owner=owner)
+
+    covered = {key: store._path(job.resolved(), key).name
+               for key, job in mine
+               if key not in deferred}
+    report = ShardReport(
+        host_id=host_id, hosts=hosts, owner=owner, keys=covered,
+        compiled=[k for k, _ in to_compile], loaded=loaded,
+        deferred=deferred, taken_over=taken_over,
+        wall_s=time.monotonic() - t0)
+    if store.persist:
+        _write_manifest(store, report)
+    return report
+
+
+def _write_manifest(store: TableStore, report: ShardReport) -> Path:
+    path = store.root / report.manifest_name
+    blob = json.dumps({
+        "v": CompileJob.VERSION,
+        "host_id": report.host_id, "hosts": report.hosts,
+        "owner": report.owner, "written": time.time(),
+        "keys": report.keys,
+        "stats": {"compiled": len(report.compiled),
+                  "loaded": len(report.loaded),
+                  "deferred": len(report.deferred),
+                  "taken_over": len(report.taken_over),
+                  "wall_s": report.wall_s},
+    }, sort_keys=True)
+    tmp = path.with_suffix(f".{os.getpid()}.tmp")
+    tmp.write_text(blob)
+    os.replace(tmp, path)
+    return path
+
+
+# -------------------------------------------------------------- rendezvous
+def merge_shards(target: TableStore,
+                 shard_dirs: Sequence["str | Path"],
+                 *, require_manifest: bool = False) -> Dict[str, int]:
+    """Union every shard directory into ``target`` (summed merge stats)."""
+    total: Dict[str, int] = {}
+    for d in shard_dirs:
+        for k, v in target.merge(d, require_manifest=require_manifest
+                                 ).items():
+            total[k] = total.get(k, 0) + v
+    return total
+
+
+def simulate_hosts(jobs: Sequence[CompileJob], *,
+                   hosts: int,
+                   root: "str | Path",
+                   processes: Optional[int] = None,
+                   claim_ttl_s: Optional[float] = None
+                   ) -> Tuple[TableStore, List[ShardReport], Dict[str, int]]:
+    """Run an N-host sweep on one machine: per-host store dirs + merge.
+
+    Each simulated host gets its own store directory under ``root`` (the
+    separate-filesystems case — the hard one for rendezvous), runs its
+    shard, and the shard dirs are merged into ``root/merged``.  Returns
+    (merged store, per-host reports, merge stats).  Used by the scaling
+    benchmark, the CI sweep smoke and the tests.
+    """
+    root = Path(root)
+    reports: List[ShardReport] = []
+    shard_dirs: List[Path] = []
+    for i in range(hosts):
+        d = root / f"host{i}"
+        shard_dirs.append(d)
+        reports.append(run_shard(
+            jobs, hosts=hosts, host_id=i, store=TableStore(d),
+            processes=processes, claim_ttl_s=claim_ttl_s,
+            owner=f"sim-host{i}"))
+    merged = TableStore(root / "merged")
+    stats = merge_shards(merged, shard_dirs)
+    return merged, reports, stats
+
+
+# ------------------------------------------------------------- paper grid
+#: Per-table (scheme, FWL) templates applied across the NAF zoo.  Tables
+#: VI/VII are the ASIC deployment sweeps: the full zoo at the 8- and
+#: 16-bit datapaths priced by the cost model.  The "smoke" preset is the
+#: same shape at 7-bit precision (seconds, used by CI and benchmarks).
+_F, _S = FWLConfig, PPAScheme
+_TABLE_TEMPLATES: Dict[str, List[Tuple[PPAScheme, FWLConfig]]] = {
+    "t1": [(_S(1, None, "fqa"), _F(8, 8, (8,), (8,), 8))],
+    "t2": [(_S(1, None, "fqa"), _F(8, 8, (7,), (8,), 8)),
+           (_S(1, None, "qpa"), _F(8, 8, (8,), (8,), 8)),
+           (_S(1, None, "plac", segmenter="bisection"),
+            _F(8, 8, (8,), (8,), 8))],
+    "t3": [(_S(2, None, "fqa"), _F(8, 8, (8, 8), (8, 8), 8))],
+    "t4": [(_S(1, m, "fqa"), _F(8, 8, (8,), (8,), 8)) for m in (2, 3, 4)],
+    "t5": [(_S(2, 4, "fqa"), _F(8, 8, (8, 8), (8, 8), 8))],
+    "t6": [(_S(1, None, "fqa"), _F(8, 8, (8,), (8,), 8)),
+           (_S(1, 4, "fqa"), _F(8, 8, (8,), (8,), 8))],
+    "t7": [(_S(1, None, "fqa"), _F(8, 16, (16,), (16,), 14)),
+           (_S(1, None, "qpa"), _F(8, 16, (16,), (16,), 16))],
+}
+_SMOKE_TEMPLATES: List[Tuple[PPAScheme, FWLConfig]] = [
+    (_S(1, None, "fqa"), _F(7, 7, (7,), (7,), 7)),
+    (_S(1, None, "qpa"), _F(7, 7, (7,), (7,), 7)),
+    (_S(1, 3, "fqa"), _F(7, 7, (7,), (7,), 7)),
+]
+_SMOKE_NAFS = ("sigmoid", "tanh", "gelu_inner", "exp2_frac")
+
+
+def paper_grid(preset: str = "paper", *,
+               nafs: Optional[Sequence[str]] = None,
+               tables: Optional[Sequence[str]] = None
+               ) -> List[CompileJob]:
+    """Enumerate the Tables I-VII x NAF-zoo sweep as ``CompileJob``s.
+
+    ``preset="paper"`` is the full grid (16-bit and order-2 points are
+    minutes each); ``preset="smoke"`` is the 7-bit shape for CI.  Duplicate
+    design points across tables collapse to one job (same store key).
+    """
+    if preset == "smoke":
+        if tables is not None:
+            raise ValueError("tables only applies to preset='paper' "
+                             "(the smoke preset is one fixed template set)")
+        templates = _SMOKE_TEMPLATES
+        zoo = nafs or _SMOKE_NAFS
+    elif preset == "paper":
+        wanted = tables or sorted(_TABLE_TEMPLATES)
+        unknown = set(wanted) - set(_TABLE_TEMPLATES)
+        if unknown:
+            raise ValueError(f"unknown tables {sorted(unknown)}; "
+                             f"available: {sorted(_TABLE_TEMPLATES)}")
+        templates = [tpl for t in wanted for tpl in _TABLE_TEMPLATES[t]]
+        zoo = nafs or sorted(NAF_REGISTRY)
+    else:
+        raise ValueError(f"unknown preset {preset!r} (paper|smoke)")
+    unknown_nafs = set(zoo) - set(NAF_REGISTRY)
+    if unknown_nafs:
+        raise ValueError(f"unknown NAFs {sorted(unknown_nafs)}")
+
+    jobs: List[CompileJob] = []
+    seen = set()
+    for naf in zoo:
+        for scheme, cfg in templates:
+            job = CompileJob(naf=naf, cfg=cfg, scheme=scheme)
+            key = job.key()
+            if key not in seen:
+                seen.add(key)
+                jobs.append(job)
+    return jobs

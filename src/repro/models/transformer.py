@@ -231,7 +231,16 @@ def _make_block(cfg: ModelCfg, stage: StageCfg, acts: ActBundle,
 # ------------------------------------------------------------ forward paths
 def _encode(params, cfg: ModelCfg, enc_feats, acts, ctx):
     enc = params["encoder"]
-    h = enc_feats + enc["pos"][None, :enc_feats.shape[1]]
+    # The conv frontend is a stub: callers hand us precomputed frame
+    # embeddings at whatever scale they have.  The real conv+GELU frontend
+    # emits unit-scale features; standardize per frame so the encoder's
+    # layernorms see that scale — a 0.1-scale residual stream turns every
+    # layernorm into a 10x gradient amplifier and makes the encoder
+    # untrainable at any sane step size.
+    mu = enc_feats.mean(-1, keepdims=True)
+    var = jnp.square(enc_feats - mu).mean(-1, keepdims=True)
+    feats = (enc_feats - mu) * jax.lax.rsqrt(var + 1e-6)
+    h = feats + enc["pos"][None, :enc_feats.shape[1]]
     stage = StageCfg("enc", cfg.enc_layers)
     body = _make_block(cfg, stage, acts, ctx)
     h, _ = _scan_stage(body, cfg, h, enc["stack"])

@@ -11,8 +11,16 @@ __all__ = ["ScheduleCfg", "lr_at"]
 
 @dataclasses.dataclass(frozen=True)
 class ScheduleCfg:
-    peak_lr: float = 3e-4
-    warmup_steps: int = 100
+    """Warmup-then-cosine schedule.
+
+    Defaults are sized for the substrate loop (tests, examples, smoke
+    runs): the default config must actually learn within tens of steps,
+    so warmup is short and the peak is toy-model-scale.  Production
+    launches size their own schedule (see repro/launch/train.py).
+    """
+
+    peak_lr: float = 3e-3
+    warmup_steps: int = 5
     decay_steps: int = 10_000
     min_ratio: float = 0.1
 

@@ -75,7 +75,10 @@ def make_train_step(cfg: ModelCfg, tcfg: TrainCfg, ctx: ShardCtx):
             metrics = {}
 
         grads, gnorm = clip_grads(grads, tcfg.grad_clip)
-        lr = lr_at(tcfg.sched, tstate["step"])
+        # 1-indexed: lr_at(cfg, 0) == 0, so the update producing state
+        # step+1 takes the step+1 rate — the first step is never a zero-lr
+        # no-op that only pollutes the optimizer moments.
+        lr = lr_at(tcfg.sched, tstate["step"] + 1)
         new_params, new_opt = opt_update(tcfg.opt, grads, tstate["opt"],
                                          params, lr)
         new_state = {"step": tstate["step"] + 1, "opt": new_opt}

@@ -76,6 +76,7 @@ def test_moe_sharded_matches_local():
 def test_ef_allreduce_preserves_sum():
     out = _run("""
         import jax, jax.numpy as jnp, numpy as np
+        from repro.compat import shard_map
         from repro.distributed import ef_allreduce
         from jax.sharding import PartitionSpec as PS
 
@@ -86,7 +87,7 @@ def test_ef_allreduce_preserves_sum():
             mean, new_err = ef_allreduce(gl[0] + err[0], "dp")
             return mean, new_err[None]
 
-        sm = jax.jit(jax.shard_map(
+        sm = jax.jit(shard_map(
             body, mesh=mesh, in_specs=(PS("dp"), PS("dp")),
             out_specs=(PS(), PS("dp")), check_vma=False))
         err = jnp.zeros_like(g)

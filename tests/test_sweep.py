@@ -1,0 +1,246 @@
+"""Multi-host sweep orchestration: key-hash sharding, the TableStore
+rendezvous (merge + manifests + version validation), resume-after-kill,
+and claim-file leasing (defer on live claims, takeover of stale ones)."""
+
+import json
+import time
+
+import pytest
+
+from repro.compiler import (CompileJob, TableStore, compile_batch,
+                            merge_shards, paper_grid, run_shard, shard_jobs,
+                            shard_of, simulate_hosts)
+from repro.core import FWLConfig, PPAScheme
+
+CFG = FWLConfig(7, 7, (7,), (7,), 7)
+
+
+def _jobs():
+    """Small mixed grid, with a duplicate design point (same store key)."""
+    out = [CompileJob(naf=n, cfg=CFG, scheme=PPAScheme(1, None, q))
+           for n in ("sigmoid", "tanh", "gelu_inner", "exp2_frac")
+           for q in ("fqa", "qpa")]
+    out.append(out[0])                 # duplicate: must not compile twice
+    return out
+
+
+def _files(root):
+    return {p.name: p.read_bytes() for p in sorted(root.glob("*.json"))}
+
+
+# ------------------------------------------------------------- partitioning
+def test_shard_partition_complete_and_disjoint():
+    jobs = _jobs()
+    keys = {j.key() for j in jobs}
+    for hosts in (1, 2, 3, 4):
+        shards = [shard_jobs(jobs, hosts, i) for i in range(hosts)]
+        got = [k for shard in shards for k, _ in shard]
+        assert len(got) == len(set(got)), "a key landed on two shards"
+        assert set(got) == keys, "partition must cover every unique key"
+        for i, shard in enumerate(shards):
+            assert all(shard_of(k, hosts) == i for k, _ in shard)
+
+
+def test_shard_jobs_validates_host_id():
+    with pytest.raises(ValueError):
+        shard_jobs(_jobs(), 2, 2)
+
+
+# ------------------------------------------- the acceptance criterion
+def test_two_host_sweep_bit_identical_to_serial(tmp_path):
+    """Separate shard store dirs + merge == single-host serial compile,
+    with each unique key compiled exactly once (compile counters)."""
+    jobs = _jobs()
+    n_unique = len({j.key() for j in jobs})
+
+    serial = TableStore(tmp_path / "serial")
+    compile_batch(jobs, store=serial, processes=1)
+    assert serial.compiles == n_unique
+
+    merged, reports, stats = simulate_hosts(
+        jobs, hosts=2, root=tmp_path / "sim", processes=1)
+    # exactly-once across hosts, nothing deferred, shards disjoint
+    assert sum(len(r.compiled) for r in reports) == n_unique
+    assert not any(r.deferred for r in reports)
+    assert stats["imported"] == n_unique
+    # the rendezvous store is bit-identical to the serial store
+    assert _files(merged.root) == _files(tmp_path / "serial")
+    # merged artifacts are loadable through normal store lookup
+    merged2 = TableStore(merged.root)
+    for job in jobs:
+        assert merged2.lookup(job) is not None
+    assert merged2.compiles == 0
+
+
+def test_manifest_written_and_reconciled(tmp_path):
+    jobs = _jobs()[:3]
+    store = TableStore(tmp_path / "h0")
+    report = run_shard(jobs, hosts=1, host_id=0, store=store, processes=1)
+    man = json.loads((store.root / report.manifest_name).read_text())
+    assert man["v"] == CompileJob.VERSION
+    assert set(man["keys"]) == set(report.keys)
+    # merge with require_manifest only imports manifest-covered artifacts
+    target = TableStore(tmp_path / "merged")
+    stats = target.merge(store.root, require_manifest=True)
+    assert stats["imported"] == len(report.keys)
+    assert stats["skipped_unmanifested"] == 0
+
+
+# ------------------------------------------------------------ resumability
+def test_resume_after_kill(tmp_path):
+    """A killed host re-runs its shard: stored keys load, the rest compile."""
+    jobs = _jobs()
+    store = TableStore(tmp_path / "h0")
+    # the host dies after finishing a prefix of its shard
+    mine = shard_jobs(jobs, 1, 0)
+    prefix = [job for _, job in mine[:3]]
+    first = run_shard(prefix, hosts=1, host_id=0, store=store, processes=1)
+    assert len(first.compiled) == 3
+
+    # restart with the full job list: only the remainder compiles
+    store2 = TableStore(tmp_path / "h0")      # fresh process view
+    report = run_shard(jobs, hosts=1, host_id=0, store=store2, processes=1)
+    assert set(report.loaded) == set(first.compiled)
+    assert len(report.compiled) == len(mine) - 3
+    assert store2.compiles == len(mine) - 3
+    # the rewritten manifest covers the whole shard, not just this run
+    man = json.loads((store2.root / report.manifest_name).read_text())
+    assert set(man["keys"]) == {k for k, _ in mine}
+
+
+# ---------------------------------------------------------- claim leasing
+def test_live_claim_defers_then_completes(tmp_path):
+    jobs = _jobs()[:2]
+    store = TableStore(tmp_path / "shared")
+    victim_key = jobs[0].key()
+    # another live host holds the lease on one key
+    assert store.try_claim(victim_key, owner="other-host")
+
+    report = run_shard(jobs, hosts=1, host_id=0, store=store, processes=1,
+                       claim_ttl_s=3600.0, owner="me")
+    assert report.deferred == [victim_key]
+    assert victim_key not in report.compiled
+    assert victim_key not in report.keys      # manifest excludes deferred
+    # claim must still belong to the other host (no takeover)
+    assert store.claim_info(victim_key)["owner"] == "other-host"
+
+    # the other host releases (or finishes); a re-run picks the key up
+    store.release_claim(victim_key)
+    report2 = run_shard(jobs, hosts=1, host_id=0, store=store, processes=1,
+                        claim_ttl_s=3600.0, owner="me")
+    assert report2.compiled == [victim_key]
+    assert not report2.deferred
+    assert store.claim_info(victim_key) is None    # released after compile
+
+
+def test_stale_claim_takeover(tmp_path):
+    """A claim left by a dead host goes stale and a survivor takes over."""
+    jobs = _jobs()[:2]
+    store = TableStore(tmp_path / "shared")
+    dead_key = jobs[1].key()
+    assert store.try_claim(dead_key, owner="dead-host")
+    # age the claim beyond the ttl
+    claim = store._claim_path(dead_key)
+    blob = json.loads(claim.read_text())
+    blob["time"] = time.time() - 1000.0
+    claim.write_text(json.dumps(blob))
+
+    report = run_shard(jobs, hosts=1, host_id=0, store=store, processes=1,
+                       claim_ttl_s=1.0, owner="survivor")
+    assert dead_key in report.taken_over
+    assert dead_key in report.compiled
+    assert not report.deferred
+    assert store.claim_info(dead_key) is None
+    assert store.lookup(jobs[1]) is not None
+
+
+def test_claim_reacquire_own(tmp_path):
+    store = TableStore(tmp_path)
+    assert store.try_claim("deadbeef00000000", owner="me")
+    # same owner may refresh its own claim even with no ttl
+    assert store.try_claim("deadbeef00000000", owner="me")
+    assert not store.try_claim("deadbeef00000000", owner="you")
+    store.release_claim("deadbeef00000000")
+    assert store.try_claim("deadbeef00000000", owner="you")
+
+
+def test_release_claim_checks_ownership(tmp_path):
+    """A host whose lease was taken over must not delete the new
+    holder's live claim (ownership-checked release)."""
+    store = TableStore(tmp_path)
+    key = "deadbeef00000001"
+    assert store.try_claim(key, owner="old")
+    assert store.try_claim(key, owner="new", ttl_s=-1.0)   # forced takeover
+    store.release_claim(key, owner="old")                  # no-op
+    assert store.claim_info(key)["owner"] == "new"
+    store.release_claim(key, owner="new")
+    assert store.claim_info(key) is None
+
+
+def test_unreadable_claim_is_not_stolen_without_ttl(tmp_path):
+    """A corrupt/unreadable claim counts as live unless a ttl ages it out
+    by file mtime — ttl_s=None must never take over."""
+    store = TableStore(tmp_path)
+    key = "deadbeef00000002"
+    store._claim_path(key).write_text("{corrupt")
+    assert not store.try_claim(key, owner="me")            # no ttl: defer
+    assert not store.try_claim(key, owner="me", ttl_s=3600.0)
+    assert store.try_claim(key, owner="me", ttl_s=-1.0)    # aged out: take
+
+
+def test_paper_grid_validates_inputs():
+    with pytest.raises(ValueError):
+        paper_grid("smoke", tables=["t1"])   # tables is paper-preset-only
+    with pytest.raises(ValueError):
+        paper_grid("paper", tables=["t99"])
+    with pytest.raises(ValueError):
+        paper_grid("smoke", nafs=["not_a_naf"])
+    with pytest.raises(ValueError):
+        paper_grid("nope")
+
+
+# ------------------------------------------------------------------ merge
+def test_merge_skips_present_and_validates_versions(tmp_path):
+    jobs = _jobs()[:2]
+    src = TableStore(tmp_path / "src")
+    run_shard(jobs, store=src, processes=1)
+    target = TableStore(tmp_path / "dst")
+    n = len({j.key() for j in jobs})
+    assert target.merge(src.root)["imported"] == n
+    # idempotent: a second merge imports nothing
+    again = target.merge(src.root)
+    assert again["imported"] == 0 and again["skipped_present"] == n
+
+    # a manifest from a different compile-semantics version is refused,
+    # and its artifacts never fall back to filename-parsed import —
+    # in the default mode as well as with require_manifest
+    man_path = next(src.root.glob("*.manifest"))
+    man = json.loads(man_path.read_text())
+    man["v"] = CompileJob.VERSION + 1
+    man_path.write_text(json.dumps(man))
+    for require in (False, True):
+        fresh = TableStore(tmp_path / f"dst_req{require}")
+        stats = fresh.merge(src.root, require_manifest=require)
+        assert stats["imported"] == 0
+        assert stats["skipped_version"] == n
+        assert stats["skipped_unmanifested"] == 0
+        assert not list(fresh.root.glob("*.json"))
+
+
+def test_merge_refuses_corrupt_artifacts(tmp_path):
+    src = tmp_path / "src"
+    src.mkdir()
+    (src / "sigmoid-FQA-O1-0123456789abcdef.json").write_text("{not json")
+    target = TableStore(tmp_path / "dst")
+    stats = target.merge(src)
+    assert stats["imported"] == 0 and stats["skipped_invalid"] == 1
+
+
+def test_merge_shards_sums_stats(tmp_path):
+    jobs = _jobs()
+    _, reports, _ = simulate_hosts(jobs, hosts=2, root=tmp_path / "sim",
+                                   processes=1)
+    target = TableStore(tmp_path / "again")
+    total = merge_shards(target, [tmp_path / "sim" / "host0",
+                                  tmp_path / "sim" / "host1"])
+    assert total["imported"] == len({j.key() for j in jobs})
