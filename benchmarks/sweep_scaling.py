@@ -1,17 +1,28 @@
-"""Sweep-scaling harness: jobs/sec at 1, 2 and 4 simulated hosts.
+"""Sweep-scaling harness: sharded vs live jobs/sec at 1, 2 and 4 workers.
 
-Runs the same design-space grid through ``repro.compiler.sweep`` with the
-job list sharded across N simulated hosts (each with its own store
-directory — the separate-filesystems rendezvous case), then merges the
-shards.  Per N it reports:
+Runs the same design-space grid through both ``repro.compiler.sweep``
+modes with N *real* worker processes and wall-clocks the whole sweep from
+the parent:
 
-  * per-shard wall time and the simulated sweep wall (the slowest shard —
-    shards are independent hosts, so the sweep finishes when the last one
-    does) and jobs/sec against that wall,
-  * the compile counters (every unique key must compile exactly once
-    across all shards), and
-  * bit-identity of the merged store against a single-host serial compile
-    of the same job list — the rendezvous acceptance check.
+  * **sharded** — the job list is pre-partitioned and every worker runs
+    ``run_shard`` against its own store directory, then the shards merge
+    (the separate-filesystems rendezvous).  The partition is
+    **deliberately skewed** (worker 0 gets everything but one job per
+    other worker): with a fixed partition the sweep finishes when the
+    overloaded worker does, which is exactly the straggler problem.
+  * **live** — every worker runs ``run_live`` against ONE shared store
+    directory and steals work key by key, so the same skew cannot happen:
+    fast workers absorb the surplus and the sweep finishes earlier.  The
+    acceptance bar is live jobs/sec >= sharded jobs/sec on the skewed
+    workload at >= 2 workers.
+
+Per mode it checks the two sweep invariants: the final store is
+bit-identical to a single-host serial compile, and every unique key
+compiled exactly once across all workers (summed manifest counters).
+
+Where real processes are unavailable (restricted sandboxes) the harness
+degrades to in-thread workers; walls are then GIL-serialized, so the
+live-vs-sharded comparison is reported but not enforced.
 
 ``--smoke`` shrinks the grid to the CI shape (seconds); it is wired into
 ``scripts/ci.sh sweep-smoke``.
@@ -20,12 +31,15 @@ shards.  Per N it reports:
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import tempfile
+import time
 from pathlib import Path
+from typing import List, Sequence, Tuple
 
-from repro.compiler import TableStore, compile_batch, paper_grid
-from repro.compiler.sweep import simulate_hosts
+from repro.compiler import (CompileJob, TableStore, compile_batch,
+                            merge_shards, paper_grid, run_live, run_shard)
 from benchmarks.common import emit
 
 
@@ -34,14 +48,88 @@ def store_files(root: Path) -> dict:
     return {p.name: p.read_bytes() for p in sorted(root.glob("*.json"))}
 
 
+def skew_partition(jobs: Sequence[CompileJob], workers: int
+                   ) -> List[List[CompileJob]]:
+    """Deliberately unbalanced fixed partition: worker 0 carries the grid,
+    every other worker gets exactly one job — the straggler case a
+    key-hash partition only produces by bad luck."""
+    uniq = list({j.key(): j for j in jobs}.values())
+    parts: List[List[CompileJob]] = [[] for _ in range(workers)]
+    for i in range(1, workers):
+        if len(uniq) > workers - i:
+            parts[i].append(uniq.pop())
+    parts[0] = uniq
+    return parts
+
+
+# ----------------------------------------------------- worker entrypoints
+# Top-level so they survive pickling under a spawn context; under the
+# default fork context they run the already-imported module directly.
+def _sharded_worker(part: Sequence[CompileJob], store_dir: str,
+                    worker_id: int) -> None:
+    run_shard(part, hosts=1, host_id=0, store=TableStore(store_dir),
+              processes=1, owner=f"shard-w{worker_id}")
+
+
+def _live_worker(jobs: Sequence[CompileJob], store_dir: str,
+                 worker_id: int, workers: int) -> None:
+    report = run_live(jobs, store=TableStore(store_dir), workers=workers,
+                      worker_id=worker_id, processes=1, claim_ttl_s=300.0,
+                      owner=f"live-w{worker_id}", poll_s=0.02)
+    if report.deferred:
+        raise SystemExit(3)
+
+
+def _run_workers(targets: List[Tuple]) -> Tuple[float, bool]:
+    """Run (fn, *args) tuples as parallel workers; (wall_s, used_processes).
+
+    Real fork()ed processes when the platform allows, threads otherwise
+    (correctness-identical: claim files coordinate either way; only the
+    wall-clock parallelism degrades).
+    """
+    t0 = time.monotonic()
+    try:
+        import multiprocessing as mp
+        ctx = mp.get_context("fork")
+        procs = [ctx.Process(target=fn, args=args) for fn, *args in targets]
+        for p in procs:
+            p.start()
+        for p in procs:
+            p.join()
+        if any(p.exitcode != 0 for p in procs):
+            raise RuntimeError(
+                f"worker exit codes {[p.exitcode for p in procs]}")
+        return time.monotonic() - t0, True
+    except (ImportError, OSError, PermissionError):
+        import threading
+        t0 = time.monotonic()
+        threads = [threading.Thread(target=fn, args=args)
+                   for fn, *args in targets]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        return time.monotonic() - t0, False
+
+
+def _manifest_compiles(root: Path) -> int:
+    """Sum of per-worker compiled counters (the exactly-once check)."""
+    total = 0
+    for man in root.glob("*.manifest"):
+        total += json.loads(man.read_text())["stats"]["compiled"]
+    return total
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
                     help="tiny 7-bit grid (CI shape)")
+    ap.add_argument("--mode", choices=("sharded", "live", "both"),
+                    default="both",
+                    help="which sweep mode(s) to time; live implies the "
+                    "skewed-sharded baseline it is compared against")
     ap.add_argument("--nafs", nargs="*", default=None)
     ap.add_argument("--hosts", nargs="*", type=int, default=(1, 2, 4))
-    ap.add_argument("--processes", type=int, default=1,
-                    help="per-host compile_batch pool (1 = serial)")
     args = ap.parse_args(argv)
 
     preset = "smoke" if args.smoke else "paper"
@@ -55,7 +143,6 @@ def main(argv=None) -> int:
         # single-host serial reference — the bit-identity baseline
         ref_dir = root / "serial"
         ref_store = TableStore(ref_dir)
-        import time
         t0 = time.monotonic()
         compile_batch(jobs, store=ref_store, processes=1)
         serial_s = time.monotonic() - t0
@@ -66,20 +153,48 @@ def main(argv=None) -> int:
 
         ok = True
         for n in args.hosts:
-            merged, reports, stats = simulate_hosts(
-                jobs, hosts=n, root=root / f"sim{n}",
-                processes=args.processes)
-            wall = max(r.wall_s for r in reports)
-            compiles = sum(len(r.compiled) for r in reports)
-            got = store_files(merged.root)
-            identical = got == ref
+            parts = skew_partition(jobs, n)
+            skew = "/".join(str(len(p)) for p in parts)
+
+            # the sharded leg always runs: it is either the mode under
+            # test or the skewed baseline the live comparison needs
+            sim = root / f"sharded{n}"
+            dirs = [sim / f"w{i}" for i in range(n)]
+            wall, real = _run_workers(
+                [(_sharded_worker, parts[i], str(dirs[i]), i)
+                 for i in range(n)])
+            merged = TableStore(sim / "merged")
+            stats = merge_shards(merged, dirs)
+            compiles = sum(_manifest_compiles(d) for d in dirs)
+            identical = store_files(merged.root) == ref
             ok &= identical and compiles == n_unique
-            emit(f"sweep_scaling/hosts{n}", wall * 1e6,
-                 jobs_per_s=f"{n_unique / wall:.2f}",
-                 speedup=f"{serial_s / wall:.2f}x",
-                 shard_jobs="/".join(str(len(r.keys)) for r in reports),
+            shard_jps = n_unique / wall
+            emit(f"sweep_scaling/sharded{n}", wall * 1e6,
+                 jobs_per_s=f"{shard_jps:.2f}",
+                 speedup=f"{serial_s / wall:.2f}x", skew=skew,
                  compiles=compiles, imported=stats.get("imported", 0),
-                 bit_identical=identical)
+                 bit_identical=identical, processes=real)
+
+            if args.mode in ("live", "both"):
+                shared = root / f"live{n}" / "shared"
+                wall, real = _run_workers(
+                    [(_live_worker, jobs, str(shared), i, n)
+                     for i in range(n)])
+                compiles = _manifest_compiles(shared)
+                identical = store_files(shared) == ref
+                live_jps = n_unique / wall
+                ok &= identical and compiles == n_unique
+                # under thread fallback or solo runs the comparison is
+                # informational — work stealing needs real parallelism
+                # and a second worker to steal from
+                if real and n >= 2:
+                    ok &= live_jps >= shard_jps
+                emit(f"sweep_scaling/live{n}", wall * 1e6,
+                     jobs_per_s=f"{live_jps:.2f}",
+                     speedup=f"{serial_s / wall:.2f}x",
+                     vs_sharded=f"{live_jps / shard_jps:.2f}x",
+                     compiles=compiles, bit_identical=identical,
+                     processes=real)
         emit("sweep_scaling/ok", 0.0, value=ok)
         return 0 if ok else 1
 

@@ -11,9 +11,17 @@
 #                         bit-exact, so kernel regressions fail CI rather
 #                         than only the offline benchmark
 #   scripts/ci.sh sweep-smoke
-#                         2-host design-space sweep in the 7-bit CI shape:
-#                         shard -> merge must be bit-identical to a serial
-#                         compile with every key compiled exactly once
+#                         design-space sweep in the 7-bit CI shape, BOTH
+#                         modes at 1 and 2 workers: sharded (shard ->
+#                         merge) and live (work-stealing over one shared
+#                         store dir) must each end bit-identical to a
+#                         serial compile with every key compiled exactly
+#                         once, and live must match or beat the skewed
+#                         sharded baseline's jobs/sec
+#   scripts/ci.sh docs-check
+#                         every python snippet in docs/*.md parses and
+#                         its imports resolve; intra-repo doc links are
+#                         unbroken
 #
 # Extra args after the mode are forwarded to pytest, e.g.
 #   scripts/ci.sh fast -k compiler
@@ -32,7 +40,11 @@ case "$mode" in
     exec python -m pytest -q -m "not slow" "$@"
     ;;
   sweep-smoke)
-    exec python -m benchmarks.sweep_scaling --smoke --hosts 1 2 "$@"
+    exec python -m benchmarks.sweep_scaling --smoke --mode both \
+         --hosts 1 2 "$@"
+    ;;
+  docs-check)
+    exec python scripts/docs_check.py "$@"
     ;;
   bench-smoke)
     out="$(python -m benchmarks.kernel_throughput --smoke)" || exit 1
@@ -42,7 +54,8 @@ case "$mode" in
     esac
     ;;
   *)
-    echo "usage: scripts/ci.sh [tier1|fast|bench-smoke|sweep-smoke]" \
+    echo "usage: scripts/ci.sh" \
+         "[tier1|fast|bench-smoke|sweep-smoke|docs-check]" \
          "[extra args...]" >&2
     exit 2
     ;;

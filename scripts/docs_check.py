@@ -1,0 +1,149 @@
+#!/usr/bin/env python
+"""Documentation checker: imports in doc snippets + intra-repo links.
+
+Docs rot silently — an entrypoint gets renamed and the handbook keeps
+recommending it.  This checker keeps `docs/*.md` (and the top-level
+`*.md` anchors) honest without executing anything expensive:
+
+  * every fenced ``python`` code block must parse, and every import it
+    names must resolve: ``import a.b`` imports, ``from m import x`` has
+    an ``x`` attribute (or ``m.x`` is a submodule).  Snippet *bodies* are
+    not executed — this is an API-existence check, not a test run.
+  * every relative markdown link ``[...](path)`` must point at a real
+    file or directory in the repo (fragments are stripped; absolute
+    ``http(s)://`` / ``mailto:`` links are out of scope).
+
+Exit 0 when clean, 1 with a per-finding report otherwise.  Wired in as
+``scripts/ci.sh docs-check``.
+"""
+
+from __future__ import annotations
+
+import ast
+import importlib
+import re
+import sys
+from pathlib import Path
+from typing import Iterator, List, Tuple
+
+ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "src"))
+
+_FENCE = re.compile(r"^(`{3,})(\S*)\s*$")
+# [text](target) — excluding images' extra bang is fine (same rules apply)
+_LINK = re.compile(r"\[[^\]^\[]*\]\(([^)\s]+)\)")
+_PY_LANGS = {"python", "py", "python3"}
+
+
+def doc_files() -> List[Path]:
+    docs = sorted((ROOT / "docs").glob("*.md"))
+    anchors = [p for p in (ROOT / "README.md", ROOT / "ROADMAP.md")
+               if p.exists()]
+    return anchors + docs
+
+
+def code_blocks(text: str) -> Iterator[Tuple[str, str, int]]:
+    """Yield (lang, source, first_line_no) for each fenced block."""
+    lines = text.splitlines()
+    i = 0
+    while i < len(lines):
+        m = _FENCE.match(lines[i])
+        if not m:
+            i += 1
+            continue
+        fence, lang = m.group(1), m.group(2).lower()
+        body: List[str] = []
+        start = i + 2                   # 1-based line of the body
+        i += 1
+        while i < len(lines) and not lines[i].startswith(fence):
+            body.append(lines[i])
+            i += 1
+        i += 1                          # closing fence
+        yield lang, "\n".join(body), start
+
+
+def _import_ok(module: str) -> Tuple[bool, str]:
+    try:
+        importlib.import_module(module)
+        return True, ""
+    except Exception as e:              # ImportError and import-time errors
+        return False, f"{type(e).__name__}: {e}"
+
+
+def check_snippet(src: str, where: str, errors: List[str]) -> int:
+    """Parse one python snippet and resolve its imports; count checked."""
+    try:
+        tree = ast.parse(src)
+    except SyntaxError as e:
+        errors.append(f"{where}: snippet does not parse: {e}")
+        return 0
+    checked = 0
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                checked += 1
+                ok, err = _import_ok(alias.name)
+                if not ok:
+                    errors.append(f"{where}: import {alias.name}: {err}")
+        elif isinstance(node, ast.ImportFrom):
+            if node.level or node.module is None:
+                continue                # relative import: not doc material
+            ok, err = _import_ok(node.module)
+            if not ok:
+                errors.append(f"{where}: from {node.module} import ...: "
+                              f"{err}")
+                continue
+            mod = importlib.import_module(node.module)
+            for alias in node.names:
+                if alias.name == "*":
+                    continue
+                checked += 1
+                if hasattr(mod, alias.name):
+                    continue
+                ok, _ = _import_ok(f"{node.module}.{alias.name}")
+                if not ok:
+                    errors.append(
+                        f"{where}: from {node.module} import {alias.name}: "
+                        f"no such attribute or submodule")
+    return checked
+
+
+def check_links(text: str, doc: Path, errors: List[str]) -> int:
+    checked = 0
+    for m in _LINK.finditer(text):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        path = target.split("#", 1)[0]
+        if not path:
+            continue
+        checked += 1
+        resolved = (doc.parent / path).resolve()
+        if not resolved.exists() and not (ROOT / path).exists():
+            errors.append(f"{doc.relative_to(ROOT)}: broken link "
+                          f"({target})")
+    return checked
+
+
+def main(argv=None) -> int:
+    errors: List[str] = []
+    snippets = imports = links = 0
+    for doc in doc_files():
+        text = doc.read_text()
+        rel = doc.relative_to(ROOT)
+        for lang, src, line in code_blocks(text):
+            if lang not in _PY_LANGS:
+                continue
+            snippets += 1
+            imports += check_snippet(src, f"{rel}:{line}", errors)
+        links += check_links(text, doc, errors)
+    for e in errors:
+        print(f"[docs-check] {e}", file=sys.stderr)
+    print(f"[docs-check] {len(doc_files())} docs: {snippets} python "
+          f"snippets, {imports} imports resolved, {links} intra-repo "
+          f"links checked, {len(errors)} problem(s)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -2,24 +2,34 @@
 """Multi-host design-space sweep CLI over the TableStore rendezvous.
 
 Enumerates the paper's Tables I-VII x NAF-zoo grid as ``CompileJob``s and
-runs *this host's* shard of it.  Sharding is deterministic store-key
-hashing, so N hosts each running
+runs it in one of two modes (``--mode``, see docs/OPERATIONS.md):
+
+**sharded** (default) — runs *this host's* key-hash shard.  N hosts each
+running
 
     python scripts/sweep.py --hosts N --host-id i --store /shard/i
 
-cover the grid exactly once with no coordinator.  The run is resumable
-(store lookup before compile; re-run after a kill and only missing keys
-compile) and lease-coordinated (claim files; ``--claim-ttl`` lets a
-survivor take over a dead host's stale claims on a shared store).  Each
-run writes a ``host<i>.manifest`` that ``--merge-from`` reconciles:
+cover the grid exactly once with no coordinator, each against its own
+store directory; ``--merge-from`` reconciles the shard manifests
+afterwards:
 
     python scripts/sweep.py --store /merged --merge-from /shard/0 /shard/1
 
-merges shard directories into a store bit-identical to a single-host
-serial compile of the same grid.
+**live** — no partition: N workers point at ONE shared store directory
+(a shared filesystem) and steal work key by key via claim leases, so a
+slow host's keys are absorbed by fast hosts and a dead host's stale
+claims are taken over (``--claim-ttl``, required for takeover).  No
+merge step:
+
+    python scripts/sweep.py --mode live --claim-ttl 300 --store /nfs/grid
+    # ... same command on every host
+
+Both modes are resumable (store lookup before compile; re-run after a
+kill and only missing keys compile) and exit 3 when keys were deferred
+under another host's live claim.
 
 Examples:
-    scripts/sweep.py --list                        # show the grid
+    scripts/sweep.py --list                        # grid + claim status
     scripts/sweep.py --preset smoke --hosts 2 --host-id 0 --store /tmp/s0
     scripts/sweep.py --tables t1 t2 --nafs sigmoid tanh --store /tmp/full
 """
@@ -31,7 +41,8 @@ import json
 import sys
 from pathlib import Path
 
-from repro.compiler import TableStore, merge_shards, paper_grid, run_shard
+from repro.compiler import (TableStore, merge_shards, paper_grid, run_live,
+                            run_shard)
 from repro.compiler.sweep import shard_jobs
 
 
@@ -45,8 +56,21 @@ def build_parser() -> argparse.ArgumentParser:
                    help="restrict the NAF zoo")
     p.add_argument("--limit", type=int, default=None,
                    help="truncate the grid (debugging)")
+    p.add_argument("--mode", choices=("sharded", "live"), default="sharded",
+                   help="sharded: key-hash partition, own store dir per "
+                   "host, merge afterwards; live: work-stealing over one "
+                   "shared store dir, no merge")
     p.add_argument("--hosts", type=int, default=1)
-    p.add_argument("--host-id", type=int, default=0)
+    p.add_argument("--host-id", type=int, default=0,
+                   help="shard selector (sharded) / worker label (live)")
+    p.add_argument("--poll", type=float, default=0.5, metavar="SEC",
+                   help="live mode: drain-pass poll interval")
+    p.add_argument("--max-wait", type=float, default=600.0, metavar="SEC",
+                   help="live mode: give up on foreign live claims after "
+                   "SEC of waiting (deferred keys, exit 3)")
+    p.add_argument("--no-drain", action="store_true",
+                   help="live mode: defer foreign-claimed keys immediately "
+                   "instead of waiting them out")
     p.add_argument("--store", type=Path, default=None,
                    help="store directory (default: REPRO_TABLE_CACHE)")
     p.add_argument("--processes", type=int, default=None,
@@ -81,13 +105,52 @@ def main(argv=None) -> int:
     if args.limit is not None:
         jobs = jobs[:args.limit]
     if args.list:
-        mine = shard_jobs(jobs, args.hosts, args.host_id)
+        # live mode has no partition: list the whole grid
+        mine = (shard_jobs(jobs, args.hosts, args.host_id)
+                if args.mode == "sharded"
+                else [(j.key(), j.resolved()) for j in
+                      dict((j.key(), j) for j in jobs).values()])
+        rows = []
         for key, job in mine:
-            print(f"{key}  {job.naf:<12} {job.scheme.tag:<14} "
-                  f"w{job.cfg.w_in}->w{job.cfg.w_out}")
-        print(f"[sweep] shard {args.host_id}/{args.hosts}: {len(mine)} of "
-              f"{len(jobs)} unique jobs")
+            # claim status makes a wedged sweep visible without reading
+            # lease files by hand: free / claimed-by-<owner> / stale(...)
+            state = ("stored" if store.contains(job) else
+                     store.claim_status(key, ttl_s=args.claim_ttl))
+            rows.append({"key": key, "naf": job.naf,
+                         "scheme": job.scheme.tag,
+                         "w_in": job.cfg.w_in, "w_out": job.cfg.w_out,
+                         "state": state})
+        if args.as_json:
+            print(json.dumps({"mode": args.mode, "store": str(store.root),
+                              "jobs": rows}))
+        else:
+            for r in rows:
+                print(f"{r['key']}  {r['naf']:<12} {r['scheme']:<14} "
+                      f"w{r['w_in']}->w{r['w_out']}  {r['state']}")
+            scope = (f"shard {args.host_id}/{args.hosts}"
+                     if args.mode == "sharded" else "live grid")
+            print(f"[sweep] {scope}: {len(mine)} of {len(jobs)} unique "
+                  f"jobs on {store.root}")
         return 0
+
+    if args.mode == "live":
+        report = run_live(jobs, store=store, workers=args.hosts,
+                          worker_id=args.host_id, processes=args.processes,
+                          claim_ttl_s=args.claim_ttl, owner=args.owner,
+                          drain=not args.no_drain, poll_s=args.poll,
+                          max_wait_s=args.max_wait)
+        if args.as_json:
+            print(json.dumps(dataclass_dict(report)))
+        else:
+            print(f"[sweep] live worker {report.host_id} on {store.root}: "
+                  f"{len(report.compiled)} compiled, "
+                  f"{len(report.loaded)} found stored, "
+                  f"{len(report.taken_over)} stale claims taken over, "
+                  f"{len(report.deferred)} deferred, "
+                  f"{report.passes} passes "
+                  f"({report.waited_s:.1f}s parked) "
+                  f"in {report.wall_s:.1f}s -> {report.manifest_name}")
+        return 0 if not report.deferred else 3
 
     report = run_shard(jobs, hosts=args.hosts, host_id=args.host_id,
                        store=store, processes=args.processes,

@@ -14,8 +14,10 @@ Pallas kernels, the jnp reference ops and the serving engine).  Pieces:
     once and shared by the whole stack.
   * :func:`compile_batch` — multi-process fan-out for independent jobs.
   * :mod:`sweep` — multi-host design-space sweeps: deterministic key-hash
-    sharding, claim-file leasing, shard manifests, and
-    :meth:`TableStore.merge` as the cross-host rendezvous.
+    sharding (``run_shard`` + :meth:`TableStore.merge` rendezvous) or live
+    work-stealing over one shared store directory (``run_live`` /
+    ``WorkQueue``: claim-skip-retry leasing, stale-claim takeover, orphan
+    drain), with claim-file leasing and shard manifests underneath both.
 """
 
 from .batch import compile_batch
@@ -23,8 +25,9 @@ from .compile import CompilerSession, compile_table, resolve_defaults
 from .memo import MemoizedSegmentEvaluator
 from .store import (CompileJob, TableStore, cache_dir, compile_or_load,
                     default_store, set_default_store)
-from .sweep import (ShardReport, merge_shards, paper_grid, run_shard,
-                    shard_jobs, shard_of, simulate_hosts)
+from .sweep import (LiveReport, ShardReport, WorkQueue, merge_shards,
+                    paper_grid, run_live, run_shard, shard_jobs, shard_of,
+                    simulate_hosts)
 
 __all__ = [
     "MemoizedSegmentEvaluator",
@@ -34,4 +37,5 @@ __all__ = [
     "compile_batch",
     "ShardReport", "merge_shards", "paper_grid", "run_shard",
     "shard_jobs", "shard_of", "simulate_hosts",
+    "LiveReport", "WorkQueue", "run_live",
 ]

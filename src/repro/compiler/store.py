@@ -18,6 +18,7 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import itertools
 import json
 import os
 import time
@@ -31,6 +32,16 @@ from .compile import CompilerSession, compile_table, resolve_defaults
 
 __all__ = ["CompileJob", "TableStore", "cache_dir", "default_store",
            "set_default_store", "compile_or_load"]
+
+
+#: Process-wide tmp-name uniquifier.  Live-mode workers may be threads of
+#: one process (tests) or forked children (benchmarks); pid alone is not a
+#: unique tmp suffix, so every tmp file also takes a counter tick.
+_TMP_TICK = itertools.count()
+
+
+def _tmp_name(path: Path, kind: str = "tmp") -> Path:
+    return path.with_suffix(f".{os.getpid()}.{next(_TMP_TICK)}.{kind}")
 
 
 def cache_dir() -> Path:
@@ -169,9 +180,16 @@ class TableStore:
         self._remember(key, table)
         if self.persist:
             path = self._path(job, key)
-            tmp = path.with_suffix(f".{os.getpid()}.tmp")
-            tmp.write_text(table.to_json())
-            os.replace(tmp, path)  # atomic
+            # stamp the compile-semantics version into the artifact so a
+            # long-lived store can be version-swept after a VERSION bump.
+            # Key order is preserved (load -> append), so every writer of a
+            # given table produces byte-identical files — the bit-identity
+            # guarantee the sweep modes are checked against.
+            blob = json.loads(table.to_json())
+            blob["v"] = CompileJob.VERSION
+            tmp = _tmp_name(path)
+            tmp.write_text(json.dumps(blob))
+            os.replace(tmp, path)  # atomic publish
 
     def lookup(self, job: CompileJob) -> Optional[PPATable]:
         """Memory then disk; None on a full miss (no compile)."""
@@ -250,7 +268,7 @@ class TableStore:
         path = self._claim_path(key)
         blob = json.dumps({"key": key, "owner": owner, "pid": os.getpid(),
                            "time": time.time()})
-        tmp = path.with_suffix(f".{os.getpid()}.claimtmp")
+        tmp = _tmp_name(path, "claimtmp")
         tmp.write_text(blob)
         try:
             os.link(tmp, path)
@@ -290,6 +308,80 @@ class TableStore:
             if cur is not None and cur.get("owner") != owner:
                 return
         self._claim_path(key).unlink(missing_ok=True)
+
+    def claim_status(self, key: str, *, ttl_s: Optional[float] = None) -> str:
+        """Operator-readable lease state for ``key``.
+
+        ``"free"`` (no claim file), ``"claimed-by-<owner>"`` (live lease)
+        or ``"stale(<owner>, <age>s)"`` once the lease is older than
+        ``ttl_s`` — i.e. the next ``try_claim(ttl_s=...)`` would take it
+        over.  An unreadable claim file reports its owner as
+        ``unreadable`` and ages by file mtime, mirroring ``try_claim``.
+        """
+        info = self.claim_info(key)
+        if info is not None:
+            age = time.time() - float(info.get("time", 0.0))
+            label = str(info.get("owner", "?"))
+        else:
+            try:
+                age = time.time() - self._claim_path(key).stat().st_mtime
+            except OSError:
+                return "free"
+            label = "unreadable"
+        if ttl_s is not None and age > ttl_s:
+            return f"stale({label}, {age:.0f}s)"
+        return f"claimed-by-{label}"
+
+    def claim_for_compile(self, job: CompileJob, *, owner: str,
+                          ttl_s: Optional[float] = None) -> str:
+        """Atomic front half of the live-sweep pipeline: claim, then
+        re-check the store *under the claim* before any compile starts.
+
+        The ordering matters — between a worker's "is it stored?" probe
+        and its claim acquisition, another worker may have compiled,
+        published and released the same key.  Re-checking after the claim
+        is held closes that window: once this returns ``"claimed"`` the
+        key is both unstored and exclusively leased, so the caller's
+        compile -> publish (atomic ``_put``) -> release sequence runs
+        exactly once per key grid-wide.
+
+        Returns ``"stored"`` (present, nothing to do — any claim we took
+        was released), ``"busy"`` (another owner's live lease; skip and
+        retry later), ``"claimed"`` (we hold a fresh lease) or
+        ``"stolen"`` (we hold the lease by taking over a stale one).
+        """
+        job = job.resolved()
+        key = job.key()
+        if self.contains(job):
+            return "stored"
+        # read-only liveness probe first: a parked worker polls every
+        # pending key each drain tick, and attempting try_claim against a
+        # known-live lease would cost a tmp write + link per key per tick
+        # on the shared filesystem.  Mirrors try_claim's staleness rules
+        # (claim time for readable claims, file mtime for unreadable
+        # ones); the subsequent try_claim re-arbitrates atomically anyway.
+        prior = self.claim_info(key)
+        path = self._claim_path(key)
+        had_other = False
+        if prior is not None and prior.get("owner") != owner:
+            age = time.time() - float(prior.get("time", 0.0))
+            if ttl_s is None or age <= ttl_s:
+                return "busy"
+            had_other = True
+        elif prior is None and path.exists():
+            try:
+                age = time.time() - path.stat().st_mtime
+            except OSError:
+                age = float("inf")
+            if ttl_s is None or age <= ttl_s:
+                return "busy"
+            had_other = True
+        if not self.try_claim(key, owner=owner, ttl_s=ttl_s):
+            return "busy"
+        if self.contains(job):      # published while we raced for the lease
+            self.release_claim(key, owner=owner)
+            return "stored"
+        return "stolen" if had_other else "claimed"
 
     # -- cross-host rendezvous -------------------------------------------------
     def merge(self, other_dir: "str | Path", *,
@@ -345,12 +437,20 @@ class TableStore:
                 continue
             try:
                 text = path.read_text()
+                blob = json.loads(text)
                 PPATable.from_json(text)    # refuse corrupt artifacts
-            except (OSError, ValueError, KeyError):
+            except (OSError, ValueError, KeyError, TypeError,
+                    AttributeError):        # incl. JSON that isn't a dict
                 stats["skipped_invalid"] += 1
                 continue
+            # artifacts stamped with a foreign compile-semantics version
+            # are refused even without a manifest vouching for them
+            if isinstance(blob, dict) and blob.get("v", CompileJob.VERSION) \
+                    != CompileJob.VERSION:
+                stats["skipped_version"] += 1
+                continue
             dst = self.root / path.name
-            tmp = dst.with_suffix(f".{os.getpid()}.tmp")
+            tmp = _tmp_name(dst)
             tmp.write_text(text)
             os.replace(tmp, dst)            # atomic, like _put
             self._mem.pop(key, None)        # force re-read if cached stale
@@ -391,6 +491,58 @@ class TableStore:
             except OSError:
                 continue
             removed.append(p)
+        return removed
+
+    def version_sweep(self, *, keep_unversioned: bool = False) -> List[Path]:
+        """Retire disk entries whose ``CompileJob.VERSION`` no longer
+        matches the running compiler's (the ROADMAP key-version sweep).
+
+        After a ``VERSION`` bump, old artifacts are unreachable through
+        normal lookups (the version is baked into every store key) but
+        still occupy the disk tier and still surface in ``--list`` /
+        ``merge`` bookkeeping.  This removes:
+
+          * artifacts stamped with a different ``"v"`` (every artifact
+            written since the stamp landed carries one),
+          * artifacts with no stamp at all — written by a pre-stamp
+            compiler, so their version is unknowable; pass
+            ``keep_unversioned=True`` to spare them,
+          * unreadable artifacts (they can never load), and
+          * shard manifests recorded at a different version (``merge``
+            refuses them anyway).
+
+        Memory-tier copies of retired keys are dropped too.  Returns the
+        removed paths.  Current-version entries are never touched.
+        """
+        if not self.persist:
+            return []
+
+        def stamped_version(p: Path):
+            try:
+                blob = json.loads(p.read_text())
+            except (OSError, ValueError):
+                return None                 # unreadable: unknown version
+            return blob.get("v") if isinstance(blob, dict) else None
+
+        removed: List[Path] = []
+        for path in sorted(self.root.glob("*.json")):
+            v = stamped_version(path)
+            if v == CompileJob.VERSION or (v is None and keep_unversioned):
+                continue
+            self._mem.pop(path.stem.rsplit("-", 1)[-1], None)
+            try:
+                path.unlink()
+            except OSError:
+                continue
+            removed.append(path)
+        for man in sorted(self.root.glob("*.manifest")):
+            if stamped_version(man) == CompileJob.VERSION:
+                continue
+            try:
+                man.unlink()
+            except OSError:
+                continue
+            removed.append(man)
         return removed
 
     def stats(self) -> Dict[str, int]:

@@ -10,6 +10,21 @@ the content-addressed on-disk tier is the rendezvous — shard directories
 merge with :meth:`TableStore.merge` into a store bit-identical to a
 single-host serial compile.
 
+Two sweep modes share those primitives:
+
+  * **Sharded** (``run_shard``) — jobs are pre-partitioned by
+    deterministic key hashing (``shard_of``); each host owns a disjoint
+    shard, typically against its *own* store directory, and shard
+    directories are merged afterwards.  No host ever waits on another,
+    but a slow or dead host strands its whole shard until an operator
+    re-runs it.
+  * **Live** (``run_live``) — N workers pull from ONE shared store
+    directory with no partition at all: each worker walks the full grid
+    claim-skip-retry style (``WorkQueue``), leasing keys as it goes, so
+    fast workers naturally absorb slow workers' work and a final drain
+    pass takes over (``claim_ttl_s``) the claims a dead worker orphaned.
+    Requires a shared filesystem; no merge step.
+
 Coordination primitives:
 
   * **Sharding** — ``shard_of(key, hosts)`` hashes the content address, so
@@ -29,8 +44,10 @@ Coordination primitives:
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import json
 import os
+import re
 import socket
 import time
 from pathlib import Path
@@ -41,9 +58,10 @@ from repro.core.functions import NAF_REGISTRY
 from repro.core.schemes import PPAScheme
 
 from .batch import compile_batch
-from .store import CompileJob, TableStore
+from .store import CompileJob, TableStore, _tmp_name
 
 __all__ = ["shard_of", "shard_jobs", "ShardReport", "run_shard",
+           "WorkQueue", "LiveReport", "run_live",
            "merge_shards", "simulate_hosts", "default_owner", "paper_grid"]
 
 
@@ -181,10 +199,198 @@ def _write_manifest(store: TableStore, report: ShardReport) -> Path:
                   "taken_over": len(report.taken_over),
                   "wall_s": report.wall_s},
     }, sort_keys=True)
-    tmp = path.with_suffix(f".{os.getpid()}.tmp")
+    tmp = _tmp_name(path)
     tmp.write_text(blob)
     os.replace(tmp, path)
     return path
+
+
+# ------------------------------------------------------------ live mode
+class WorkQueue:
+    """One worker's claim-coordinated, work-stealing view of a job list.
+
+    Every live worker builds the same queue from the same job list; the
+    shared store directory is the only coordination channel.  A worker
+    repeatedly claims a *wave* of unstored, unleased keys — skipping keys
+    another worker holds (claim-skip) and re-probing them on later passes
+    (retry) — compiles the wave, publishes, releases.  There is no
+    partition: whichever worker gets to a key first compiles it, so fast
+    workers drain slow workers' share of the grid, and once ``claim_ttl_s``
+    ages out a dead worker's leases its keys become claimable again
+    (takeover).
+
+    Scan order is rotated by a hash of the owner tag so N workers starting
+    together probe different ends of the grid instead of racing for the
+    same first key — pure contention avoidance; correctness never depends
+    on the order.
+    """
+
+    def __init__(self, jobs: Sequence[CompileJob], store: TableStore, *,
+                 owner: str, claim_ttl_s: Optional[float] = None):
+        self.store = store
+        self.owner = owner
+        self.claim_ttl_s = claim_ttl_s
+        uniq: Dict[str, CompileJob] = {}
+        for job in jobs:
+            job = job.resolved()
+            uniq.setdefault(job.key(), job)
+        entries = list(uniq.items())
+        if entries:
+            off = int(hashlib.sha1(owner.encode()).hexdigest(), 16) \
+                % len(entries)
+            entries = entries[off:] + entries[:off]
+        self.entries: List[Tuple[str, CompileJob]] = entries
+        self.done: set = set()              # keys verified in the store
+        self.loaded: List[str] = []         # found stored (any compiler)
+        self.compiled: List[str] = []       # compiled by THIS worker
+        self.taken_over: List[str] = []     # leases stolen from the dead
+
+    def pending(self) -> List[Tuple[str, CompileJob]]:
+        """Keys not yet verified stored (claimable or under a live lease)."""
+        return [(k, j) for k, j in self.entries if k not in self.done]
+
+    def claim_wave(self, width: int) -> List[Tuple[str, CompileJob]]:
+        """Lease up to ``width`` compilable keys; classify the rest.
+
+        Keys found stored are marked done (another worker — or a previous
+        sweep — already published them).  Keys under a live foreign lease
+        are skipped, to be re-probed on the next pass.  An empty return
+        with non-empty :meth:`pending` means everything left is being
+        compiled by someone else right now.
+        """
+        wave: List[Tuple[str, CompileJob]] = []
+        for key, job in self.pending():
+            status = self.store.claim_for_compile(
+                job, owner=self.owner, ttl_s=self.claim_ttl_s)
+            if status == "stored":
+                self.done.add(key)
+                self.loaded.append(key)
+            elif status == "busy":
+                continue
+            else:
+                if status == "stolen":
+                    self.taken_over.append(key)
+                wave.append((key, job))
+                if len(wave) >= width:
+                    break
+        return wave
+
+    def refresh(self, wave: Sequence[Tuple[str, CompileJob]]) -> None:
+        """Re-stamp this worker's leases so their age tracks the wave
+        start, not the claim scan — the per-wave heartbeat that keeps a
+        *live* worker's keys from being stolen mid-compile."""
+        for key, _ in wave:
+            self.store.try_claim(key, owner=self.owner,
+                                 ttl_s=self.claim_ttl_s)
+
+    def release(self, wave: Sequence[Tuple[str, CompileJob]]) -> None:
+        for key, _ in wave:
+            self.store.release_claim(key, owner=self.owner)
+
+    def mark_compiled(self, wave: Sequence[Tuple[str, CompileJob]]) -> None:
+        for key, _ in wave:
+            self.done.add(key)
+            self.compiled.append(key)
+
+
+@dataclasses.dataclass
+class LiveReport(ShardReport):
+    """ShardReport plus live-mode bookkeeping.  ``host_id``/``hosts`` are
+    informational worker labels — live mode has no partition."""
+
+    passes: int = 0                     # claim-scan passes over the grid
+    waited_s: float = 0.0               # time parked waiting on live leases
+
+    @property
+    def manifest_name(self) -> str:
+        # keyed on the owner tag, not host_id: the documented live-mode
+        # invocation is the SAME command on every host (nobody passes
+        # --host-id), and all workers share one directory — id-keyed
+        # names would clobber each other's stats.  The default owner
+        # (host:pid) is unique per worker.
+        safe = re.sub(r"[^A-Za-z0-9._-]+", "-", self.owner)
+        return f"live-{safe}.manifest"
+
+
+def run_live(jobs: Sequence[CompileJob], *,
+             store: Optional[TableStore] = None,
+             workers: int = 1,
+             worker_id: int = 0,
+             processes: Optional[int] = None,
+             claim_ttl_s: Optional[float] = None,
+             owner: Optional[str] = None,
+             drain: bool = True,
+             poll_s: float = 0.05,
+             max_wait_s: Optional[float] = 600.0) -> LiveReport:
+    """Work-steal the whole grid from ONE shared store directory.
+
+    Run the same call on N workers pointing at the same ``store`` root
+    (shared filesystem): each worker claims keys as it reaches them
+    (claim -> re-check -> compile -> publish -> release, via
+    :meth:`TableStore.claim_for_compile`), so the grid is compiled exactly
+    once with no pre-partition and no post-merge — a straggler holds up at
+    most the keys it is actively leasing.
+
+    The loop ends with a **drain pass**: when every remaining key is under
+    another worker's live lease, this worker parks (``poll_s``) until the
+    keys either appear in the store (the other worker published) or their
+    leases go stale (the other worker died) and get taken over — so a
+    crashed host never leaves the grid incomplete as long as one worker
+    survives.  ``claim_ttl_s`` must be set for takeover; with it unset, a
+    dead worker's keys stay deferred and the call returns after
+    ``max_wait_s`` (report.deferred non-empty, CLI exit 3).
+
+    ``claim_ttl_s`` needs to outlive one *wave* (≤ ``processes`` compiles),
+    not the sweep: leases are re-stamped per wave (`WorkQueue.refresh`).
+    """
+    store = store if store is not None else TableStore()
+    owner = owner or default_owner()
+    t0 = time.monotonic()
+    q = WorkQueue(jobs, store, owner=owner, claim_ttl_s=claim_ttl_s)
+    width = processes if processes and processes > 0 else \
+        (os.cpu_count() or 1)
+    passes = 0
+    waited = 0.0            # parked time since the grid last made progress
+    total_waited = 0.0
+    last_done = -1
+    deferred: List[str] = []
+    while True:
+        passes += 1
+        wave = q.claim_wave(width)
+        # any progress — a wave we claimed OR keys other workers published
+        # (claim_wave marks them stored) — resets the give-up clock, so a
+        # parked worker never defers while the sweep is visibly advancing
+        if len(q.done) != last_done:
+            last_done = len(q.done)
+            waited = 0.0
+        if wave:
+            try:
+                q.refresh(wave)
+                compile_batch([job for _, job in wave], store=store,
+                              processes=processes)
+                q.mark_compiled(wave)
+            finally:
+                q.release(wave)
+            continue
+        remaining = q.pending()
+        if not remaining:
+            break
+        if not drain or (max_wait_s is not None and waited >= max_wait_s):
+            deferred = [k for k, _ in remaining]
+            break
+        time.sleep(poll_s)
+        waited += poll_s
+        total_waited += poll_s
+    covered = {key: store._path(job, key).name
+               for key, job in q.entries if key in q.done}
+    report = LiveReport(
+        host_id=worker_id, hosts=workers, owner=owner, keys=covered,
+        compiled=q.compiled, loaded=q.loaded, deferred=deferred,
+        taken_over=q.taken_over, wall_s=time.monotonic() - t0,
+        passes=passes, waited_s=total_waited)
+    if store.persist:
+        _write_manifest(store, report)
+    return report
 
 
 # -------------------------------------------------------------- rendezvous

@@ -1,15 +1,18 @@
 """Multi-host sweep orchestration: key-hash sharding, the TableStore
 rendezvous (merge + manifests + version validation), resume-after-kill,
-and claim-file leasing (defer on live claims, takeover of stale ones)."""
+claim-file leasing (defer on live claims, takeover of stale ones), and
+the live work-stealing mode (shared store dir, orphan drain,
+version_sweep)."""
 
 import json
+import threading
 import time
 
 import pytest
 
 from repro.compiler import (CompileJob, TableStore, compile_batch,
-                            merge_shards, paper_grid, run_shard, shard_jobs,
-                            shard_of, simulate_hosts)
+                            merge_shards, paper_grid, run_live, run_shard,
+                            shard_jobs, shard_of, simulate_hosts)
 from repro.core import FWLConfig, PPAScheme
 
 CFG = FWLConfig(7, 7, (7,), (7,), 7)
@@ -186,6 +189,230 @@ def test_unreadable_claim_is_not_stolen_without_ttl(tmp_path):
     assert not store.try_claim(key, owner="me")            # no ttl: defer
     assert not store.try_claim(key, owner="me", ttl_s=3600.0)
     assert store.try_claim(key, owner="me", ttl_s=-1.0)    # aged out: take
+
+
+# ------------------------------------------------------------- live mode
+def test_two_worker_live_sweep_bit_identical_to_serial(tmp_path):
+    """Two workers stealing from one shared store dir produce a store
+    bit-identical to a serial compile, each unique key compiled exactly
+    once grid-wide, with no leftover claims."""
+    jobs = _jobs()
+    n_unique = len({j.key() for j in jobs})
+    serial = TableStore(tmp_path / "serial")
+    compile_batch(jobs, store=serial, processes=1)
+
+    shared = tmp_path / "shared"
+    reports = [None, None]
+
+    def work(i):
+        reports[i] = run_live(jobs, store=TableStore(shared), workers=2,
+                              worker_id=i, processes=1, claim_ttl_s=3600.0,
+                              owner=f"w{i}", poll_s=0.01)
+
+    threads = [threading.Thread(target=work, args=(i,)) for i in range(2)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+
+    assert all(r is not None for r in reports)
+    # exactly-once: the claim lease arbitrates every key to one worker
+    assert sum(len(r.compiled) for r in reports) == n_unique
+    assert not any(r.deferred for r in reports)
+    assert not any(r.taken_over for r in reports)     # generous ttl
+    # every worker saw the whole grid land
+    for r in reports:
+        assert set(r.keys) == {j.key() for j in jobs}
+        assert (shared / r.manifest_name).exists()
+    assert _files(shared) == _files(tmp_path / "serial")
+    assert not list(shared.glob("*.claim"))           # all leases released
+
+
+def test_live_resumes_from_stored_keys(tmp_path):
+    """Keys published by an earlier sweep are loaded, never recompiled."""
+    jobs = _jobs()
+    store = TableStore(tmp_path / "shared")
+    compile_batch(jobs[:3], store=store, processes=1)
+    done = {j.key() for j in jobs[:3]}
+
+    report = run_live(jobs, store=TableStore(tmp_path / "shared"),
+                      processes=1, owner="w0", poll_s=0.01)
+    assert set(report.loaded) == done
+    assert set(report.compiled) == {j.key() for j in jobs} - done
+
+
+def test_live_worker_kill_survivor_drains_orphans(tmp_path):
+    """Mid-sweep death: a worker leaves stale claims on unstored keys; a
+    surviving worker's drain pass takes them over and finishes the grid."""
+    jobs = _jobs()[:4]
+    store = TableStore(tmp_path / "shared")
+    # the dead worker got partway: one key published, two claimed-only
+    compile_batch(jobs[:1], store=store, processes=1)
+    orphaned = [jobs[1].key(), jobs[2].key()]
+    for key in orphaned:
+        assert store.try_claim(key, owner="dead-worker")
+        claim = store._claim_path(key)
+        blob = json.loads(claim.read_text())
+        blob["time"] = time.time() - 1000.0     # the worker stopped beating
+        claim.write_text(json.dumps(blob))
+
+    survivor = TableStore(tmp_path / "shared")
+    report = run_live(jobs, store=survivor, processes=1, claim_ttl_s=1.0,
+                      owner="survivor", poll_s=0.01)
+    assert set(report.taken_over) == set(orphaned)
+    assert set(report.compiled) >= set(orphaned)
+    assert not report.deferred
+    for job in jobs:
+        assert survivor.contains(job)
+    assert not list(survivor.root.glob("*.claim"))
+
+
+def test_live_defers_on_live_foreign_claim_without_drain(tmp_path):
+    """A fresh foreign lease is never stolen; with drain off the key is
+    deferred immediately (re-run picks it up once released)."""
+    jobs = _jobs()[:2]
+    store = TableStore(tmp_path / "shared")
+    held = jobs[0].key()
+    assert store.try_claim(held, owner="other")
+
+    report = run_live(jobs, store=store, processes=1, claim_ttl_s=3600.0,
+                      owner="me", drain=False, poll_s=0.01)
+    assert report.deferred == [held]
+    assert held not in report.keys
+    assert store.claim_info(held)["owner"] == "other"
+
+    store.release_claim(held)
+    report2 = run_live(jobs, store=store, processes=1, claim_ttl_s=3600.0,
+                       owner="me", poll_s=0.01)
+    assert report2.compiled == [held]
+    assert not report2.deferred
+
+
+def test_live_drain_waits_out_a_live_claim(tmp_path):
+    """The drain pass parks on a live foreign lease and completes as soon
+    as the other worker publishes and releases."""
+    store = TableStore(tmp_path / "shared")
+    held_job = _jobs()[0]
+    held = held_job.key()
+    assert store.try_claim(held, owner="other")
+
+    def other_worker():
+        # the other worker takes a while, then publishes and releases
+        time.sleep(0.2)
+        compile_batch([held_job], store=TableStore(store.root), processes=1)
+        store.release_claim(held, owner="other")
+
+    t = threading.Thread(target=other_worker)
+    t.start()
+    # this worker's whole grid is under the foreign lease: it must park
+    # in the drain pass, then pick the key up as loaded once published
+    report = run_live([held_job], store=store, processes=1,
+                      claim_ttl_s=3600.0, owner="me", poll_s=0.01,
+                      max_wait_s=30.0)
+    t.join()
+    assert not report.deferred
+    assert report.loaded == [held]      # published by the other worker
+    assert not report.compiled
+    assert report.waited_s > 0.0
+    assert report.passes >= 2
+
+
+def test_claim_for_compile_recheck_under_claim(tmp_path):
+    """A key published between the contains probe and the claim cannot be
+    compiled twice: claim_for_compile re-checks under the held lease."""
+    jobs = _jobs()[:1]
+    store = TableStore(tmp_path)
+    job = jobs[0]
+    key = job.key()
+    assert store.claim_for_compile(job, owner="me") == "claimed"
+    store.release_claim(key, owner="me")
+    compile_batch([job], store=store, processes=1)
+    assert store.claim_for_compile(job, owner="me") == "stored"
+    assert store.claim_info(key) is None
+
+    # a stale foreign lease on an unstored key reports a steal
+    other = CompileJob(naf="tanh", cfg=CFG)
+    store.try_claim(other.key(), owner="dead")
+    assert store.claim_for_compile(other, owner="me", ttl_s=-1.0) == "stolen"
+    assert store.claim_for_compile(other, owner="me2") == "busy"
+
+
+def test_claim_status_reports_operator_view(tmp_path):
+    store = TableStore(tmp_path)
+    key = "deadbeef00000003"
+    assert store.claim_status(key) == "free"
+    store.try_claim(key, owner="hostA")
+    assert store.claim_status(key) == "claimed-by-hostA"
+    assert store.claim_status(key, ttl_s=3600.0) == "claimed-by-hostA"
+    claim = store._claim_path(key)
+    blob = json.loads(claim.read_text())
+    blob["time"] = time.time() - 1000.0
+    claim.write_text(json.dumps(blob))
+    assert store.claim_status(key, ttl_s=60.0).startswith("stale(hostA")
+    store.release_claim(key)
+    assert store.claim_status(key) == "free"
+
+
+# --------------------------------------------------------- version sweep
+def test_version_sweep_removes_only_stale_entries(tmp_path):
+    """Only entries stamped with a foreign CompileJob.VERSION (plus
+    unversioned/unreadable strays and stale manifests) are retired."""
+    jobs = _jobs()[:3]
+    store = TableStore(tmp_path)
+    report = run_shard(jobs, store=store, processes=1)
+    current = sorted(p.name for p in store.root.glob("*.json"))
+    assert len(current) == len({j.key() for j in jobs})
+
+    # forge one artifact and one manifest from an older compiler
+    stale_art = store.root / "sigmoid-FQA-O1-00000000deadbeef.json"
+    blob = json.loads((store.root / current[0]).read_text())
+    blob["v"] = CompileJob.VERSION - 1
+    stale_art.write_text(json.dumps(blob))
+    stale_man = store.root / "host999.manifest"
+    man = json.loads((store.root / report.manifest_name).read_text())
+    man["v"] = CompileJob.VERSION - 1
+    stale_man.write_text(json.dumps(man))
+
+    removed = store.version_sweep()
+    assert set(removed) == {stale_art, stale_man}
+    assert sorted(p.name for p in store.root.glob("*.json")) == current
+    assert (store.root / report.manifest_name).exists()
+    # idempotent
+    assert store.version_sweep() == []
+
+    # retired keys vanish from the memory tier too
+    stale_key = "00000000deadbee0"
+    stale2 = store.root / f"sigmoid-FQA-O1-{stale_key}.json"
+    stale2.write_text(json.dumps(blob))
+    store._mem[stale_key] = store.lookup(jobs[0])
+    store.version_sweep()
+    assert stale_key not in store._mem
+
+    # unversioned artifacts are spared only with keep_unversioned
+    legacy = dict(blob)
+    legacy.pop("v")
+    legacy_art = store.root / "sigmoid-FQA-O1-00000000deadbee1.json"
+    legacy_art.write_text(json.dumps(legacy))
+    assert store.version_sweep(keep_unversioned=True) == []
+    assert store.version_sweep() == [legacy_art]
+
+
+def test_version_stamp_in_artifacts_and_merge_refusal(tmp_path):
+    """Published artifacts carry the compile-semantics version, and merge
+    refuses a foreign-version artifact even without any manifest."""
+    jobs = _jobs()[:1]
+    src = TableStore(tmp_path / "src")
+    compile_batch(jobs, store=src, processes=1)
+    art = next(src.root.glob("*.json"))
+    assert json.loads(art.read_text())["v"] == CompileJob.VERSION
+
+    blob = json.loads(art.read_text())
+    blob["v"] = CompileJob.VERSION + 1
+    art.write_text(json.dumps(blob))
+    target = TableStore(tmp_path / "dst")
+    stats = target.merge(src.root)
+    assert stats["imported"] == 0
+    assert stats["skipped_version"] == 1
 
 
 def test_paper_grid_validates_inputs():
