@@ -1,9 +1,20 @@
-"""Shared benchmark helpers: timing + CSV emission."""
+"""Shared benchmark helpers: timing + CSV emission + JSON reports.
+
+Every ``emit`` row is printed as CSV (the human-readable stream the
+benchmarks always produced) AND collected in-process; ``write_json`` dumps
+the collected rows as one machine-readable ``BENCH_*.json`` report so CI
+and sweep tooling can consume benchmark results without screen-scraping.
+"""
 
 from __future__ import annotations
 
+import json
+import sys
 import time
-from typing import Callable
+from pathlib import Path
+from typing import Callable, List
+
+_ROWS: List[dict] = []
 
 
 def timeit(fn: Callable, *args, repeats: int = 5, warmup: int = 1) -> float:
@@ -23,3 +34,27 @@ def emit(name: str, us_per_call: float = 0.0, **derived):
     parts = [name, f"{us_per_call:.2f}"]
     parts += [f"{k}={v}" for k, v in derived.items()]
     print(",".join(parts))
+    _ROWS.append({"name": name, "us_per_call": round(float(us_per_call), 2),
+                  **derived})
+
+
+def rows() -> List[dict]:
+    """The rows emitted so far (a copy)."""
+    return list(_ROWS)
+
+
+def reset_rows() -> None:
+    _ROWS.clear()
+
+
+def write_json(path: "str | Path", **meta) -> Path:
+    """Dump every row emitted so far as one JSON report (``BENCH_*.json``).
+
+    ``meta`` keys land at the top level next to ``rows`` — benchmarks use
+    them for the knobs the run was taken under (smoke mode, grid, ...).
+    """
+    path = Path(path)
+    blob = {"generated_unix_s": round(time.time(), 2), "argv": sys.argv,
+            **meta, "rows": _ROWS}
+    path.write_text(json.dumps(blob, indent=1, default=str) + "\n")
+    return path

@@ -45,7 +45,9 @@ def main() -> None:
         t0 = time.time()
         try:
             mod = __import__(name, fromlist=["main"])
-            mod.main()
+            rc = mod.main()
+            if rc:      # status-returning benchmarks (failed assertions)
+                failures.append(name)
         except Exception:
             traceback.print_exc()
             failures.append(name)

@@ -1,34 +1,136 @@
 """Software-side search throughput: candidate evaluations per second for
-each quantizer (the cost TBW amortizes), and the full-space size the FQA
-search covers per segment."""
+each quantizer and each search backend (the cost TBW amortizes), and the
+full-space size the FQA search covers per segment.
+
+Sweeps BOTH searchspace backends (numpy golden, jitted jax) over order-1
+and order-2 extended-range FQA configs — plus the baseline quantizers —
+on full "best"-mode scans (no early exit: the paper's Alg. 1/2 full-space
+cost).  Every timed run constructs a fresh evaluator, so the reported
+``calls``/``cand_evals`` counters are those of exactly one segment fit,
+never inflated across ``timeit`` repeats.
+
+Asserts (hard, CI-visible):
+  * both backends return bit-identical ``SegmentFit``s per config;
+  * the jax backend clears ``--min-speedup`` x the numpy golden backend's
+    candidate-evals/sec on the order-2 extended FQA fit (the acceptance
+    gate: 3x on a full run, >= 1x in ``--smoke``; skip-with-notice when
+    jax x64 is unavailable).
+
+Emits the machine-readable report ``BENCH_search.json`` (``--out``).
+"""
 
 from __future__ import annotations
 
+import argparse
+
 import numpy as np
 
-from repro.core import (FWLConfig, PPAScheme, SegmentEvaluator,
-                        grid_for_interval, make_quantizer)
+from benchmarks.common import emit, reset_rows, timeit, write_json
+from repro.core import (FWLConfig, SegmentEvaluator, grid_for_interval,
+                        jax_backend_available, make_quantizer)
 from repro.core.functions import get_naf
-from benchmarks.common import emit, timeit
+
+QUANTIZERS = ("fqa", "fqa_fast", "qpa", "plac")
 
 
-def main() -> None:
-    cfg = FWLConfig(8, 8, (8,), (8,), 8)
+def _configs(smoke: bool):
+    if smoke:
+        return {
+            "o1": (FWLConfig(7, 7, (7,), (7,), 7), 40),
+            "o2": (FWLConfig(7, 7, (7, 7), (7, 7), 7), 40),
+        }
+    return {
+        "o1": (FWLConfig(8, 8, (8,), (8,), 8), 48),
+        "o2": (FWLConfig(8, 8, (8, 8), (8, 8), 8), 48),
+    }
+
+
+def _fit_fields(fit):
+    return (fit.ok, fit.mae, fit.a_int, fit.b_int, fit.mae0,
+            fit.n_satisfying, fit.evals, fit.warm_hit)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="7-bit configs, 1 repeat (CI shape)")
+    ap.add_argument("--min-speedup", type=float, default=None,
+                    help="required jax/numpy evals-per-sec ratio on the "
+                    "order-2 extended FQA fit (default 3.0, smoke 1.0)")
+    ap.add_argument("--repeats", type=int, default=None)
+    ap.add_argument("--out", default="BENCH_search.json",
+                    help="JSON report path ('' disables)")
+    # tolerate foreign flags: benchmarks.run invokes main() under its own
+    # argv (--skip-slow/--only)
+    args, _ = ap.parse_known_args(argv)
+    reset_rows()    # this module's JSON report must not absorb rows other
+    # benchmarks emitted earlier in the same process (benchmarks.run)
+    min_speedup = args.min_speedup if args.min_speedup is not None \
+        else (1.0 if args.smoke else 3.0)
+    repeats = args.repeats if args.repeats is not None \
+        else (1 if args.smoke else 3)
+
+    jax_ok, jax_why = jax_backend_available()
+    backends = ["numpy"] + (["jax"] if jax_ok else [])
+    if not jax_ok:
+        emit("search/jax/SKIPPED", 0.0, reason=jax_why)
+
     spec = get_naf("sigmoid")
-    x_int = grid_for_interval(0, 1, 8)
-    f = spec(x_int / 256.0)
-    for qname in ("fqa", "fqa_fast", "qpa", "plac"):
-        q = make_quantizer(qname)
-        ev = SegmentEvaluator(x_int, f, cfg, q, mae_t=1.953e-3)
-        us = timeit(lambda: ev.evaluate(0, 24), repeats=5)
-        fit = ev.evaluate(0, 24)
-        emit(f"search/{qname}", us, evals_per_fit=fit.evals,
-             evals_per_s=f"{max(1, fit.evals) / (us * 1e-6):.2e}",
-             ok=fit.ok)
-    emit("search/fqa_space_per_stage", 0.0,
-         d_range=f"[-2^k, 2^(k+1)] with k=w_a+w_in-w_o",
-         k_at_8bit=cfg.d_bits(0))
+    rates: dict = {}
+    fits: dict = {}
+    for oname, (cfg, width) in _configs(args.smoke).items():
+        x_int = grid_for_interval(*spec.interval, cfg.w_in)
+        f = spec(x_int.astype(np.float64) / (1 << cfg.w_in))
+        mae_t = 0.5 ** (cfg.w_out + 1)
+
+        def one_fit(qname, backend, mode="best"):
+            # fresh evaluator per call: single-fit counters, no carryover
+            ev = SegmentEvaluator(x_int, f, cfg,
+                                  make_quantizer(qname, backend=backend),
+                                  mae_t)
+            fit = ev.evaluate(0, width, mode=mode)
+            assert ev.calls == 1 and ev.cand_evals == fit.evals
+            return fit
+
+        for backend in backends:
+            for qname in QUANTIZERS:
+                us = timeit(lambda: one_fit(qname, backend),
+                            repeats=repeats, warmup=1)
+                fit = one_fit(qname, backend)
+                rate = max(1, fit.evals) / (us * 1e-6)
+                rates[(oname, backend, qname)] = rate
+                fits[(oname, backend, qname)] = fit
+                emit(f"search/{oname}/{backend}/{qname}", us,
+                     evals_per_fit=fit.evals,
+                     evals_per_s=f"{rate:.2e}", ok=fit.ok)
+
+        if jax_ok:
+            for qname in QUANTIZERS:
+                a = fits[(oname, "numpy", qname)]
+                b = fits[(oname, "jax", qname)]
+                assert _fit_fields(a) == _fit_fields(b), \
+                    f"backend fit divergence at {oname}/{qname}: " \
+                    f"{_fit_fields(a)} != {_fit_fields(b)}"
+            emit(f"search/{oname}/parity", 0.0, bit_identical=True)
+
+        emit(f"search/{oname}_fqa_space_per_stage", 0.0,
+             d_range="[-2^k, 2^(k+1)] with k=w_a+w_in-w_o",
+             k_at_stage0=cfg.d_bits(0))
+
+    status = 0
+    if jax_ok:
+        ratio = rates[("o2", "jax", "fqa")] / rates[("o2", "numpy", "fqa")]
+        emit("search/o2/jax_vs_numpy_fqa", 0.0,
+             speedup=f"{ratio:.2f}x", required=f"{min_speedup:.2f}x")
+        if ratio < min_speedup:
+            emit("search/o2/jax_vs_numpy_fqa_FAILED", 0.0, ratio=ratio)
+            status = 1
+    if args.out:
+        write_json(args.out, benchmark="search_throughput",
+                   smoke=args.smoke, min_speedup=min_speedup,
+                   jax_available=jax_ok)
+    return status
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

@@ -7,14 +7,26 @@ the seed (cold) evaluator on the Table-1 sigmoid config, for the two hot
 search loops — the Fig. 7 hardware-constrained binary search and the
 Sec. III-C FWL shrink flow.  Results must be identical (asserted); the
 candidate-evaluation counts must strictly drop (asserted).
+
+And the speculative-probe-batching report: wall-clock per compiled table
+over the NAF-zoo smoke grid (TBW phase, tSEG pre-estimated) for the jitted
+jax backend with speculation off vs on, against the numpy golden path.
+Compiled tables must be bit-identical across every variant — same store
+keys, same artifacts modulo the documented effort counters; numpy vs jax
+at speculation off must match byte-for-byte (all asserted) — and
+speculation on must reduce the jax wall-clock per table (asserted).
+
+Emits ``BENCH_tbw.json``.
 """
 
 from __future__ import annotations
 
-from repro.compiler import CompilerSession, compile_table
+from repro.compiler import (CompileJob, CompilerSession, compile_table,
+                            table_identity)
+from repro.compiler.compile import resolve_defaults
 from repro.core import (FWLConfig, PPAScheme, hardware_constrained_ppa,
-                        optimize_fwls)
-from benchmarks.common import emit, timeit
+                        jax_backend_available, optimize_fwls)
+from benchmarks.common import emit, reset_rows, timeit, write_json
 
 F, S = FWLConfig, PPAScheme
 
@@ -90,9 +102,84 @@ def compiler_reuse_report() -> None:
          cand_eval_ratio=f"{rows['seed'][3]['cand_evals'] / rows['memoized'][3]['cand_evals']:.2f}x")
 
 
+def speculative_report() -> None:
+    """Speculative probe batching on the NAF-zoo smoke grid (7-bit TBW).
+
+    tSEG is pre-estimated once per NAF (the d=0 reference run is identical
+    in every variant), so the timed region is the TBW probe/finalize phase
+    the speculation machinery targets.  ``speculate=3`` turns on both
+    halves of it: fused lookahead dispatches inside each probe's feasible
+    scan, and the probe planner's batched multi-window prefetch.
+    """
+    ok, why = jax_backend_available()
+    if not ok:
+        emit("tbw/speculative/SKIPPED", 0.0, reason=why)
+        return
+    nafs = ("sigmoid", "tanh", "gelu_inner", "exp2_frac")
+    cfg = F(7, 7, (7,), (7,), 7)
+    sch = S(1, None, "fqa")
+    sess0 = CompilerSession()
+    tsegs = {}
+    for naf in nafs:
+        spec, interval, mae_t = resolve_defaults(naf, cfg, None, None)
+        tsegs[naf] = sess0.tseg_for(spec, interval, cfg, mae_t)
+
+    variants = {
+        "numpy": dict(search_backend="numpy", speculate=0),
+        "jax": dict(search_backend="jax", speculate=0),
+        "jax+spec": dict(search_backend="jax", speculate=3),
+    }
+    walls, tables, counters = {}, {}, {}
+
+    for name, kw in variants.items():
+        def compile_grid():
+            sess = CompilerSession()
+            tabs = [compile_table(naf, cfg, sch, session=sess,
+                                  tseg=tsegs[naf], **kw) for naf in nafs]
+            return tabs, sess.counters()
+
+        us = timeit(lambda: compile_grid(), repeats=5, warmup=1)
+        tabs, c = compile_grid()
+        walls[name] = us / len(nafs)
+        tables[name] = tabs
+        counters[name] = c
+        emit(f"tbw/speculative/{name}", us / len(nafs),
+             tables=len(nafs), cand_evals=c["cand_evals"],
+             misses=c["misses"], spec_windows=c["spec_windows"],
+             hits=c["hits"])
+
+    # store keys ignore the execution knobs: every variant addresses the
+    # same artifact
+    for naf in nafs:
+        keys = {CompileJob(naf=naf, cfg=cfg, scheme=sch, tseg=tsegs[naf],
+                           **kw).key()
+                for kw in variants.values()}
+        assert len(keys) == 1, f"store keys diverged for {naf}: {keys}"
+    # artifacts: numpy vs jax byte-identical; speculation identical modulo
+    # the documented effort counters (EFFORT_STAT_KEYS)
+    for a, b in zip(tables["numpy"], tables["jax"]):
+        assert a.to_json() == b.to_json(), "numpy/jax artifact divergence"
+    for a, b in zip(tables["numpy"], tables["jax+spec"]):
+        assert table_identity(a) == table_identity(b), \
+            "speculative artifact divergence"
+    emit("tbw/speculative/bit_identity", 0.0, store_keys="same",
+         numpy_vs_jax="byte-identical", speculative="identical-mod-effort")
+
+    ratio = walls["jax+spec"] / walls["jax"]
+    emit("tbw/speculative/wall_ratio", 0.0,
+         jax_spec_over_jax=f"{ratio:.3f}",
+         reduced=bool(ratio < 1.0))
+    assert ratio < 1.0, \
+        f"speculative probe batching did not reduce wall-clock ({ratio:.3f})"
+
+
 def main() -> None:
+    reset_rows()    # keep BENCH_tbw.json to this module's rows even when
+    # other benchmarks ran earlier in the process (benchmarks.run)
     segmenter_report()
     compiler_reuse_report()
+    speculative_report()
+    write_json("BENCH_tbw.json", benchmark="tbw_speedup")
 
 
 if __name__ == "__main__":

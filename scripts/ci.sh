@@ -18,6 +18,15 @@
 #                         serial compile with every key compiled exactly
 #                         once, and live must match or beat the skewed
 #                         sharded baseline's jobs/sec
+#   scripts/ci.sh search-smoke
+#                         search-backend tier: the backend bit-identity /
+#                         speculative-TBW tests plus the throughput
+#                         benchmark in smoke shape — the jitted jax
+#                         backend must run bit-identical to the numpy
+#                         golden backend and match or beat its evals/sec
+#                         on the order-2 extended FQA grid (the benchmark
+#                         prints a skip notice where jax x64 is
+#                         unavailable)
 #   scripts/ci.sh docs-check
 #                         every python snippet in docs/*.md parses and
 #                         its imports resolve; intra-repo doc links are
@@ -43,6 +52,11 @@ case "$mode" in
     exec python -m benchmarks.sweep_scaling --smoke --mode both \
          --hosts 1 2 "$@"
     ;;
+  search-smoke)
+    python -m pytest -q tests/test_searchspace.py "$@" || exit 1
+    exec python -m benchmarks.search_throughput --smoke \
+         --out BENCH_search.json
+    ;;
   docs-check)
     exec python scripts/docs_check.py "$@"
     ;;
@@ -55,7 +69,7 @@ case "$mode" in
     ;;
   *)
     echo "usage: scripts/ci.sh" \
-         "[tier1|fast|bench-smoke|sweep-smoke|docs-check]" \
+         "[tier1|fast|bench-smoke|sweep-smoke|search-smoke|docs-check]" \
          "[extra args...]" >&2
     exit 2
     ;;

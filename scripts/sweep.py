@@ -28,22 +28,33 @@ Both modes are resumable (store lookup before compile; re-run after a
 kill and only missing keys compile) and exit 3 when keys were deferred
 under another host's live claim.
 
+``--backend numpy|jax`` / ``--speculate DEPTH`` pick how THIS host
+executes the candidate scan (jitted x64 scan, TBW speculative probe
+batching).  Execution-only: store keys and artifacts are bit-identical
+across backends, so heterogeneous fleets share one store
+(docs/OPERATIONS.md "Choosing the search backend per host").
+
 Examples:
     scripts/sweep.py --list                        # grid + claim status
     scripts/sweep.py --preset smoke --hosts 2 --host-id 0 --store /tmp/s0
     scripts/sweep.py --tables t1 t2 --nafs sigmoid tanh --store /tmp/full
+    scripts/sweep.py --tables t3 t5 t7 --backend jax --speculate 3
 """
 
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
+import os
 import sys
 from pathlib import Path
 
 from repro.compiler import (TableStore, merge_shards, paper_grid, run_live,
                             run_shard)
 from repro.compiler.sweep import shard_jobs
+from repro.core.searchspace import (BACKEND_ENV, SEARCH_BACKENDS,
+                                    jax_backend_available)
 
 
 def build_parser() -> argparse.ArgumentParser:
@@ -73,6 +84,17 @@ def build_parser() -> argparse.ArgumentParser:
                    "instead of waiting them out")
     p.add_argument("--store", type=Path, default=None,
                    help="store directory (default: REPRO_TABLE_CACHE)")
+    p.add_argument("--backend", choices=sorted(SEARCH_BACKENDS),
+                   default=None,
+                   help="search backend for THIS host's compiles (numpy "
+                   "golden / jitted jax; default $REPRO_SEARCH_BACKEND, "
+                   "then numpy).  Execution-only: artifacts and store keys "
+                   "are bit-identical across backends, so mixed-backend "
+                   "fleets share one store")
+    p.add_argument("--speculate", type=int, default=None, metavar="DEPTH",
+                   help="TBW speculative probe batching depth for this "
+                   "host (default $REPRO_TBW_SPECULATE, then 0 = off); "
+                   "execution-only, like --backend")
     p.add_argument("--processes", type=int, default=None,
                    help="compile_batch pool size (1 = serial)")
     p.add_argument("--claim-ttl", type=float, default=None, metavar="SEC",
@@ -104,6 +126,21 @@ def main(argv=None) -> int:
     jobs = paper_grid(args.preset, nafs=args.nafs, tables=args.tables)
     if args.limit is not None:
         jobs = jobs[:args.limit]
+    # the flag and $REPRO_SEARCH_BACKEND are documented as equivalent:
+    # degrade EITHER to numpy with a notice when jax x64 is missing,
+    # rather than erroring on every key of a live sweep
+    effective_backend = args.backend or os.environ.get(BACKEND_ENV)
+    if effective_backend == "jax":
+        ok, why = jax_backend_available()
+        if not ok:
+            print(f"[sweep] jax search backend unavailable on this host "
+                  f"({why}); falling back to numpy", file=sys.stderr)
+            args.backend = "numpy"
+    if args.backend is not None or args.speculate is not None:
+        # execution knobs only — job.key() ignores them, so the shard
+        # partition and the store rendezvous are unchanged
+        jobs = [dataclasses.replace(j, search_backend=args.backend,
+                                    speculate=args.speculate) for j in jobs]
     if args.list:
         # live mode has no partition: list the whole grid
         mine = (shard_jobs(jobs, args.hosts, args.host_id)

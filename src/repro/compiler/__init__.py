@@ -21,7 +21,8 @@ Pallas kernels, the jnp reference ops and the serving engine).  Pieces:
 """
 
 from .batch import compile_batch
-from .compile import CompilerSession, compile_table, resolve_defaults
+from .compile import (EFFORT_STAT_KEYS, CompilerSession, compile_table,
+                      resolve_defaults, table_identity)
 from .memo import MemoizedSegmentEvaluator
 from .store import (CompileJob, TableStore, cache_dir, compile_or_load,
                     default_store, set_default_store)
@@ -32,6 +33,7 @@ from .sweep import (LiveReport, ShardReport, WorkQueue, merge_shards,
 __all__ = [
     "MemoizedSegmentEvaluator",
     "CompilerSession", "compile_table", "resolve_defaults",
+    "EFFORT_STAT_KEYS", "table_identity",
     "CompileJob", "TableStore", "cache_dir", "compile_or_load",
     "default_store", "set_default_store",
     "compile_batch",

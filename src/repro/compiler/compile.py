@@ -15,6 +15,8 @@ fit instead of restarting from scratch.
 
 from __future__ import annotations
 
+import json
+import os
 from typing import Callable, Dict, Optional, Tuple
 
 import numpy as np
@@ -24,12 +26,24 @@ from repro.core.fixed_point import grid_for_interval, round_half_away
 from repro.core.functions import NAFSpec, get_naf
 from repro.core.quantize import Quantizer, make_quantizer
 from repro.core.schemes import PPAScheme, PPATable, eval_table_int
+from repro.core.searchspace import SearchBackend, resolve_backend
 from repro.core.segmentation import (bisection_segment, estimate_tseg,
                                      sequential_segment, tbw_segment)
 
 from .memo import MemoizedSegmentEvaluator
 
-__all__ = ["CompilerSession", "compile_table", "resolve_defaults"]
+__all__ = ["CompilerSession", "compile_table", "resolve_defaults",
+           "EFFORT_STAT_KEYS", "table_identity"]
+
+#: env var consulted when ``compile_table`` gets no explicit ``speculate``
+#: — the operator knob for TBW speculative probe batching (depth; 0 = off).
+SPECULATE_ENV = "REPRO_TBW_SPECULATE"
+
+
+def resolve_speculate(speculate: Optional[int]) -> int:
+    if speculate is not None:
+        return int(speculate)
+    return int(os.environ.get(SPECULATE_ENV, "0") or 0)
 
 
 def resolve_defaults(naf: "str | NAFSpec",
@@ -51,7 +65,26 @@ def resolve_defaults(naf: "str | NAFSpec",
     return spec, interval, float(mae_t)
 
 _COUNTER_KEYS = ("calls", "hits", "misses", "pruned", "warm_hits",
-                 "cand_evals", "points_touched")
+                 "spec_windows", "cand_evals", "points_touched")
+
+#: ``PPATable.stats`` keys that record search *effort*, not the compiled
+#: artifact: they move with the search backend's dispatch pattern, the memo
+#: cache and speculative probe batching while the table itself stays
+#: bit-identical.  ``table_identity`` excludes exactly these.
+EFFORT_STAT_KEYS = frozenset({
+    "segment_evals", "candidate_evals", "points_touched",
+    "memo_hits", "memo_misses", "memo_pruned", "warm_hits", "spec_windows",
+})
+
+
+def table_identity(table: PPATable) -> dict:
+    """The artifact with effort counters stripped — what must be equal
+    across search backends, speculation settings and memoization levels
+    (the benchmarks' and tests' bit-identity oracle)."""
+    blob = json.loads(table.to_json())
+    blob["stats"] = {k: v for k, v in blob["stats"].items()
+                     if k not in EFFORT_STAT_KEYS}
+    return blob
 
 
 class CompilerSession:
@@ -119,6 +152,8 @@ def compile_table(
     tseg: Optional[int] = None,
     final_mode: str = "best",
     session: Optional[CompilerSession] = None,
+    search_backend: "str | SearchBackend | None" = None,
+    speculate: Optional[int] = None,
 ) -> PPATable:
     """Run fit -> quantize -> segment for one NAF and pack the table.
 
@@ -127,20 +162,34 @@ def compile_table(
     memoized window fits with every other compile on that session; without
     one an ephemeral session is used (warm starts and finalize hits still
     apply within the single compile).
+
+    ``search_backend`` / ``speculate`` are *execution* knobs — the search
+    backend the candidate blocks run on (numpy golden / jitted jax;
+    ``$REPRO_SEARCH_BACKEND``) and the TBW speculative-probe depth
+    (``$REPRO_TBW_SPECULATE``).  Neither changes the compiled table
+    (:func:`table_identity` asserted in tests and benchmarks), so neither
+    is part of the store address.
     """
     spec, interval, mae_t = resolve_defaults(naf, cfg, mae_t, interval)
     session = session or CompilerSession()
+    backend = resolve_backend(search_backend)
+    speculate = resolve_speculate(speculate)
 
+    # the backend is part of the *evaluator* key (clean per-backend
+    # counters; results are backend-independent) but never of a store key.
     scheme_qkey = ("scheme", scheme.quantizer, scheme.m_shifters,
-                   scheme.weight)
+                   scheme.weight, backend.name, speculate)
     ev = session.evaluator(spec, interval, cfg, scheme_qkey,
-                           scheme.build_quantizer, mae_t)
+                           lambda: scheme.build_quantizer(
+                               backend=backend, lookahead=speculate),
+                           mae_t)
     before = _snapshot(ev)
 
     if scheme.segmenter == "tbw":
         if tseg is None:
             tseg = session.tseg_for(spec, interval, cfg, mae_t)
-        segments = tbw_segment(ev, tseg, final_mode=final_mode)
+        segments = tbw_segment(ev, tseg, final_mode=final_mode,
+                               speculate=speculate)
     elif scheme.segmenter == "bisection":
         segments = bisection_segment(ev, final_mode=final_mode)
     elif scheme.segmenter == "sequential":
@@ -173,6 +222,7 @@ def compile_table(
             "memo_misses": delta["misses"],
             "memo_pruned": delta["pruned"],
             "warm_hits": delta["warm_hits"],
+            "spec_windows": delta["spec_windows"],
             "tseg": float(tseg or 0),
         })
     # cross-check: golden re-evaluation of the packed table

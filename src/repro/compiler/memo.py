@@ -38,18 +38,30 @@ candidate space* — probes that would succeed anyway succeed after one
 candidate evaluation instead of a chunk scan, and decisions are bit-
 identical to the uncached evaluator either way.
 
+Speculative probe batching (``prefetch``): TBW with ``speculate > 0``
+announces the windows its inner loop can visit next; the ones the cache
+cannot already answer are fitted as ONE batched multi-window quantizer
+dispatch (``Quantizer.fit_segments`` lockstep over the search backend) and
+recorded exactly like sequential misses, so the probes that follow are
+cache hits.  Each speculative fit is a real feasible-mode scan of its window,
+so every verdict it caches is the verdict a sequential scan would have
+produced — segment choices are bit-identical with speculation on or off
+(warm-candidate *content* may differ; warm hits never change verdicts, and
+final per-segment fits are full "best"-mode scans either way).
+
 Counters distinguish logical requests from work done: ``calls`` counts
 every request (as in the seed), ``hits``/``pruned`` the requests answered
-from the cache, ``misses`` the real quantizer scans, ``warm_hits`` the
-misses resolved by the warm candidate.  ``cand_evals``/``points_touched``
-only ever grow on misses.
+from the cache, ``misses`` the real quantizer scans (speculative ones
+included), ``warm_hits`` the misses resolved by the warm candidate,
+``spec_windows`` the windows fitted speculatively.
+``cand_evals``/``points_touched`` only ever grow on misses.
 """
 
 from __future__ import annotations
 
 import bisect
 import dataclasses
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -83,11 +95,16 @@ class MemoizedSegmentEvaluator(SegmentEvaluator):
         self.misses = 0
         self.pruned = 0
         self.warm_hits = 0
+        self.spec_windows = 0   # windows fitted by speculative prefetch
         self._cache: Dict[Tuple[int, int], _Entry] = {}
         # per-start frontier of complete fits: (ends sorted asc, running-max
         # achievable MAE per end) — the containment lower bound.
         self._frontier: Dict[int, Tuple[List[int], List[float]]] = {}
         self._warm: Dict[int, Tuple[int, ...]] = {}
+        # per-window Remez coefficients: a window scanned once (hint,
+        # probe, finalize, any MAE_t) never re-solves the exchange — the
+        # candidate space it regenerates is identical by construction.
+        self._areal: Dict[Tuple[int, int], np.ndarray] = {}
         f_q = round_half_away(self.f_vals * (1 << cfg.w_out)) \
             / (1 << cfg.w_out)
         self._qerr = np.abs(self.f_vals - f_q)
@@ -130,44 +147,164 @@ class MemoizedSegmentEvaluator(SegmentEvaluator):
                 lb = maes[i]
         return lb
 
+    def _cached_answer(self, start: int, end: int, mode: str):
+        """What the cache can answer this request with — ``("hit", fit)``,
+        ``("pruned", fit)`` or None (a real scan is needed).  The ONE
+        predicate behind both ``evaluate``'s fast paths and ``prefetch``'s
+        filter, so speculation can never drift from the cache policy."""
+        ent = self._cache.get((start, end))
+        if ent is not None and mode != "full":
+            if ent.complete or (mode == "feasible"
+                                and ent.fit.mae <= self.mae_t + _EPS):
+                return "hit", self._at_target(ent.fit)
+        if mode == "feasible":
+            lb = self.lower_bound(start, end)
+            if lb > self.mae_t + _EPS:
+                return "pruned", SegmentFit(
+                    ok=False, mae=float(lb),
+                    a_int=tuple(0 for _ in range(self.cfg.order)), b_int=0)
+        return None
+
     # -- the evaluator entrypoint ----------------------------------------------
     def evaluate(self, start: int, end: int, mode: str = "feasible"
                  ) -> SegmentFit:
         if not self.enabled:
             return super().evaluate(start, end, mode)
         self.calls += 1
-        key = (start, end)
-        ent = self._cache.get(key)
-        if ent is not None and mode != "full":
-            if ent.complete or (mode == "feasible"
-                                and ent.fit.mae <= self.mae_t + _EPS):
+        answer = self._cached_answer(start, end, mode)
+        if answer is not None:
+            kind, fit = answer
+            if kind == "hit":
                 self.hits += 1
-                return self._at_target(ent.fit)
-        if mode == "feasible":
-            lb = self.lower_bound(start, end)
-            if lb > self.mae_t + _EPS:
+            else:
                 self.pruned += 1
-                return SegmentFit(
-                    ok=False, mae=float(lb),
-                    a_int=tuple(0 for _ in range(self.cfg.order)), b_int=0)
+            return fit
 
-        self.misses += 1
-        self.points_touched += end - start + 1
+        key = (start, end)
         warm = self._warm.get(start) if mode == "feasible" else None
         fit = self.quantizer.fit_segment(
             self.x_int[start: end + 1], self.f_vals[start: end + 1],
-            self.cfg, self.mae_t, mode=mode, a_warm=warm)
+            self.cfg, self.mae_t, mode=mode, a_warm=warm,
+            a_real=self._areal.get(key))
+        self._record(start, end, fit, mode)
+        return fit
+
+    def _record(self, start: int, end: int, fit: SegmentFit,
+                mode: str) -> None:
+        """Book a real quantizer scan of [start, end] — the one miss path,
+        shared by sequential evaluation and speculative prefetch so both
+        feed the cache/frontier/warm state identically."""
+        self.misses += 1
+        self.points_touched += end - start + 1
         self.cand_evals += fit.evals
+        if fit.a_real is not None:
+            self._areal.setdefault((start, end), fit.a_real)
         if fit.warm_hit:
             self.warm_hits += 1
         if fit.ok:
             self._warm[start] = fit.a_int
         # a feasible-mode scan that found nothing is exhaustive -> complete
         complete = mode != "feasible" or not fit.ok
+        ent = self._cache.get((start, end))
         if ent is None or complete:
-            self._cache[key] = _Entry(fit, complete)
+            self._cache[(start, end)] = _Entry(fit, complete)
             if complete:
                 self._frontier_add(start, end, fit.mae)
         elif fit.mae < ent.fit.mae:
-            self._cache[key] = _Entry(fit, False)   # tighter upper bound
-        return fit
+            self._cache[(start, end)] = _Entry(fit, False)  # tighter bound
+
+    # -- speculative probe batching --------------------------------------------
+    #: chunk budget for *successor* windows in a speculative batch.  The
+    #: first window (the probe that is definitely evaluated next) scans
+    #: unbounded; successors — of which at most one is visited — stop
+    #: after this many chunks, so a mispredicted branch costs one chunk,
+    #: not an exhaustive scan.  FQA orders candidates by |d| (d≈0 first),
+    #: so feasible windows overwhelmingly resolve inside the warm probe or
+    #: the first chunk and still turn into cache hits.
+    SPEC_CHUNK_BUDGET = 1
+
+    def prefetch(self, windows: List[Tuple[int, int]],
+                 mode: str = "feasible") -> None:
+        """Fit every still-unanswered window in ONE batched dispatch.
+
+        Windows the cache can already answer — a hit under the current
+        MAE_t, or a monotone-pruning verdict — are skipped (the later
+        ``evaluate`` call answers them for free either way).  The rest go
+        through :meth:`Quantizer.fit_segments`, which runs their scans in
+        lockstep and fuses each round's candidate blocks into one
+        multi-window backend dispatch.  The leading window scans in full
+        and is recorded exactly like a sequential miss; speculative
+        successors scan under ``SPEC_CHUNK_BUDGET`` and are recorded as
+        *partial* knowledge only (a satisfying candidate becomes a cache
+        hit + warm seed; a truncated failure at most tightens an upper
+        bound, never a verdict).  Only ever *adds* cache knowledge, so
+        verdicts — and therefore TBW's chosen segments — are unchanged.
+        """
+        if not self.enabled or not windows:
+            return
+        # phase 1 — the leading window is the probe the sequential flow
+        # evaluates next, so it scans in full through the solo path (warm
+        # short-circuit + fused lookahead dispatches) and is recorded as
+        # the miss it replaces.
+        start, end = windows[0]
+        if self._needs_fit(start, end, mode):
+            self.spec_windows += 1
+            warm = self._warm.get(start) if mode == "feasible" else None
+            fit = self.quantizer.fit_segment(
+                self.x_int[start: end + 1], self.f_vals[start: end + 1],
+                self.cfg, self.mae_t, mode=mode, a_warm=warm,
+                a_real=self._areal.get((start, end)))
+            self._record(start, end, fit, mode)
+        # phase 2 — successor windows, re-filtered now that the primary's
+        # outcome is known (a failed primary's frontier entry prunes the
+        # grow branch for free).  Only windows whose Remez fit is already
+        # cached are hinted: a mispredicted *fresh* window would pay an
+        # exchange solve — the one per-window cost batching cannot fuse —
+        # for a 50/50 branch, which measures as a net loss on CPU-class
+        # dispatch latencies.  Re-probes (MAE_t retargets, finalize
+        # overlaps) are exactly the free-to-hint population.
+        todo: List[Tuple[int, int]] = []
+        warms: List[Optional[Tuple[int, ...]]] = []
+        for s, e in windows[1:]:
+            if (s, e) in todo or (s, e) == (start, end):
+                continue
+            if (s, e) not in self._areal:
+                continue
+            ent = self._cache.get((s, e))
+            if ent is not None and ent.fit.truncated:
+                continue    # already hinted once; don't re-pay its chunk
+            if not self._needs_fit(s, e, mode):
+                continue
+            todo.append((s, e))
+            warms.append(self._warm.get(s) if mode == "feasible" else None)
+        if not todo:
+            return
+        self.spec_windows += len(todo)
+        fits = self.quantizer.fit_segments(
+            [(self.x_int[s: e + 1], self.f_vals[s: e + 1]) for s, e in todo],
+            self.cfg, self.mae_t, mode=mode, warms=warms,
+            max_chunks=[self.SPEC_CHUNK_BUDGET] * len(todo),
+            a_reals=[self._areal[w] for w in todo])
+        for (s, e), fit in zip(todo, fits):
+            if fit.truncated:
+                self._record_hint(s, e, fit)
+            else:
+                self._record(s, e, fit, mode)
+
+    def _needs_fit(self, start: int, end: int, mode: str) -> bool:
+        """Would :meth:`evaluate` run a real scan for this request right
+        now?  (Shared predicate — no counters are charged here.)"""
+        return self._cached_answer(start, end, mode) is None
+
+    def _record_hint(self, start: int, end: int, fit: SegmentFit) -> None:
+        """Book a budget-truncated speculative scan: real work (counters)
+        but only *partial* knowledge — its MAE is an upper bound over a
+        scanned prefix, so it may tighten a partial entry yet must never
+        become a complete one or touch the frontier."""
+        self.points_touched += end - start + 1
+        self.cand_evals += fit.evals
+        if fit.a_real is not None:
+            self._areal.setdefault((start, end), fit.a_real)
+        ent = self._cache.get((start, end))
+        if ent is None or (not ent.complete and fit.mae < ent.fit.mae):
+            self._cache[(start, end)] = _Entry(fit, False)

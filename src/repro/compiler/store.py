@@ -73,6 +73,14 @@ class CompileJob:
     interval: Optional[Tuple[float, float]] = None
     tseg: Optional[int] = None
     final_mode: str = "best"
+    #: execution knobs, NOT part of the address (``key`` excludes them):
+    #: the search backend and TBW speculation depth change how fast a job
+    #: compiles, never what it compiles (asserted by the search-smoke CI
+    #: tier), so two hosts running different backends still rendezvous on
+    #: one artifact per key.  None defers to $REPRO_SEARCH_BACKEND /
+    #: $REPRO_TBW_SPECULATE on the compiling host.
+    search_backend: Optional[str] = None
+    speculate: Optional[int] = None
 
     def resolved(self) -> "CompileJob":
         """Fill in the defaults the compiler would use (one shared
@@ -102,7 +110,9 @@ class CompileJob:
         return compile_table(job.naf, job.cfg, job.scheme,
                              mae_t=job.mae_t, interval=job.interval,
                              tseg=job.tseg, final_mode=job.final_mode,
-                             session=session)
+                             session=session,
+                             search_backend=job.search_backend,
+                             speculate=job.speculate)
 
 
 class TableStore:

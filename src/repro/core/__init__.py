@@ -15,6 +15,9 @@ from .quantize import (FQAQuantizer, MLPLACQuantizer, PLACQuantizer,
                        QPAQuantizer, Quantizer, SegmentFit, make_quantizer)
 from .registry import DEFAULT_SCHEMES, get_table
 from .remez import fit_minimax, horner
+from .searchspace import (SEARCH_BACKENDS, JaxSearchBackend,
+                          NumpySearchBackend, SearchBackend,
+                          jax_backend_available, resolve_backend)
 from .schemes import (PPAScheme, PPATable, compile_ppa_table, eval_table_int,
                       table_mae_report)
 from .segmentation import (Segment, SegmentEvaluator, bisection_segment,
@@ -33,6 +36,8 @@ __all__ = [
     "Quantizer", "SegmentFit", "make_quantizer",
     "DEFAULT_SCHEMES", "get_table",
     "fit_minimax", "horner",
+    "SEARCH_BACKENDS", "JaxSearchBackend", "NumpySearchBackend",
+    "SearchBackend", "jax_backend_available", "resolve_backend",
     "PPAScheme", "PPATable", "compile_ppa_table", "eval_table_int",
     "table_mae_report",
     "Segment", "SegmentEvaluator", "bisection_segment", "estimate_tseg",

@@ -2,7 +2,10 @@
 
 All quantizers share one contract: given a segment of the discrete input
 grid and the target function, produce integer datapath coefficients and the
-resulting MAE_hard, evaluated bit-exactly through ``datapath.horner_fixed``.
+resulting MAE_hard, evaluated bit-exactly through the shared datapath code
+path (``searchspace._block_metrics`` over ``datapath.horner_body``) on a
+pluggable execution backend — numpy golden or jitted jax, bit-identical by
+contract (``searchspace.resolve_backend``).
 
   * ``FQAQuantizer``    — full-space search over the truncation-induced
     offset range d (paper Eq. 4/5, Alg. 1/2), optional Hamming-weight
@@ -19,14 +22,14 @@ The intercept b is never searched: it is error-flattened then rounded
 from __future__ import annotations
 
 import dataclasses
-import itertools
 from typing import Callable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .datapath import FWLConfig, concat_add, horner_fixed
-from .fixed_point import hamming_weight, round_half_away, trunc_shift
+from .datapath import FWLConfig
+from .fixed_point import hamming_weight, round_half_away
 from .remez import fit_minimax
+from .searchspace import SearchBackend, SegmentContext, resolve_backend
 
 __all__ = [
     "SegmentFit",
@@ -55,19 +58,185 @@ class SegmentFit:
     b_candidates: Optional[np.ndarray] = None  # (K,)
     evals: int = 0                # candidate evaluations performed
     warm_hit: bool = False        # satisfied by the warm-start candidate
+    #: the scan stopped on a block budget (speculative prefetch) with
+    #: candidates left unscanned and no satisfying set found: ``mae`` is an
+    #: upper bound over the scanned prefix, NOT the space minimum, and the
+    #: scan must not be treated as exhaustive.  Always False for plain
+    #: ``fit_segment`` calls.
+    truncated: bool = False
+    #: the pre-quantization (Remez) coefficients this scan's candidate
+    #: space was centered on — cached by the memoized evaluator so a
+    #: window re-scanned later (speculative hint -> real probe, feasible
+    #: probe -> best-mode finalize, MAE retargeting) skips the exchange
+    #: solve and provably regenerates the identical candidate space.
+    a_real: Optional[np.ndarray] = None
+
+
+class _SegmentScan:
+    """Stepper over one segment's candidate space.
+
+    Owns the chunk-loop state of :meth:`Quantizer.fit_segment` — warm-start
+    short-circuit, first-stage chunking with later stages broadcast, early
+    exit, full-mode candidate storage — so a single segment (sequential
+    path) and many segments in lockstep (the speculative batched path) run
+    the *same* scan.  The resulting :class:`SegmentFit` — including the
+    ``evals``/``n_satisfying`` counters — is bit-identical either way,
+    whichever backend executes the blocks.
+    """
+
+    def __init__(self, quantizer: "Quantizer", ctx: SegmentContext,
+                 cands: List[np.ndarray], mae_t: float, mode: str,
+                 a_warm: Optional[Tuple[int, ...]],
+                 max_chunks: Optional[int] = None):
+        self.q = quantizer
+        self.ctx = ctx
+        self.mae_t = float(mae_t)
+        self.mode = mode
+        self.max_chunks = max_chunks     # block budget (speculative scans)
+        self.chunks_issued = 0
+        self.truncated = False
+        self.a_real: Optional[np.ndarray] = None   # set by _start_scan
+        n = ctx.cfg.order
+        self.best = SegmentFit(False, np.inf, tuple(0 for _ in range(n)), 0)
+        self.done = any(c.size == 0 for c in cands)  # empty candidate space
+        self.evals = 0
+        self.n_sat = 0
+        self.sat_a: List[np.ndarray] = []
+        self.sat_b: List[np.ndarray] = []
+        self.stored_rows = 0
+        # chunk over the first-stage candidates; later stages broadcast.
+        self.first = cands[0] if not self.done else np.empty(0, np.int64)
+        rest = cands[1:] if not self.done else []
+        rest_grid = np.meshgrid(*rest, indexing="ij") if rest else []
+        self.rest_flat = [g.reshape(-1) for g in rest_grid]  # (R,) each
+        self.R = self.rest_flat[0].size if self.rest_flat else 1
+        self.c0 = 0
+        self._pending: List[Tuple[str, List[np.ndarray]]] = []
+        # warm start: a candidate that was good for an overlapping window
+        # is usually still good here; it must lie inside *this* segment's
+        # candidate space so feasibility semantics stay identical.  A
+        # *budgeted* (speculative-hint) scan skips the warm short-circuit
+        # and spends its budget on the leading chunks directly — the warm
+        # candidate almost always lives there anyway (FQA orders by |d|),
+        # and the hint contract only needs verdict-soundness, not the
+        # sequential scan's exact path.
+        self._warm: Optional[Tuple[int, ...]] = None
+        if (not self.done and a_warm is not None and mode == "feasible"
+                and max_chunks is None and len(a_warm) == n
+                and all((cands[i] == int(a_warm[i])).any()
+                        for i in range(n))):
+            self._warm = tuple(int(v) for v in a_warm)
+
+    def next_block(self) -> Optional[List[np.ndarray]]:
+        """The next candidate block to evaluate, or None when the scan is
+        over.  Every returned block must be fed back through ``consume``
+        (in order; modes without early exit may queue several blocks and
+        consume them after a fused dispatch)."""
+        if self.done:
+            return None
+        if self._warm is not None:
+            warm, self._warm = self._warm, None
+            a_list = [np.asarray([v], dtype=np.int64) for v in warm]
+            self._pending.append(("warm", warm, a_list))
+            return a_list
+        if self.c0 >= self.first.size:
+            self.done = True
+            return None
+        # block budget: warm probes are free, chunks are metered — a
+        # budgeted scan that stops with candidates left is ``truncated``
+        if (self.max_chunks is not None
+                and self.chunks_issued >= self.max_chunks):
+            self.truncated = True
+            self.done = True
+            return None
+        self.chunks_issued += 1
+        a0 = self.first[self.c0: self.c0 + self.q.chunk]     # (C,)
+        self.c0 += self.q.chunk
+        a_list = [np.repeat(a0, self.R)]        # (C*R,) per-stage vectors
+        for rf in self.rest_flat:
+            a_list.append(np.tile(rf, a0.size))
+        self._pending.append(("chunk", None, a_list))
+        return a_list
+
+    def consume(self, mae: np.ndarray, b_int: np.ndarray,
+                mae0: np.ndarray) -> None:
+        kind, warm, a_list = self._pending.pop(0)
+        self.evals += a_list[0].size
+        if kind == "warm":
+            if mae[0] <= self.mae_t + _EPS:
+                self.best = SegmentFit(
+                    ok=True, mae=float(mae[0]), a_int=warm,
+                    b_int=int(b_int[0]), mae0=float(mae0[0]),
+                    n_satisfying=1, evals=self.evals, warm_hit=True)
+                self.done = True
+            return
+        k = int(np.argmin(mae))
+        if mae[k] < self.best.mae:
+            self.best = SegmentFit(
+                ok=bool(mae[k] <= self.mae_t + _EPS),
+                mae=float(mae[k]),
+                a_int=tuple(int(a[k]) for a in a_list),
+                b_int=int(b_int[k]),
+                mae0=float(mae0[k]),
+            )
+        good = mae <= self.mae_t + _EPS
+        ng = int(good.sum())
+        self.n_sat += ng
+        # cap on actually-accumulated rows: a block holds C*R candidates,
+        # not ``chunk`` — counting chunks let extended order-2 scans buffer
+        # far past the cap before the final slice trimmed them.
+        if (self.mode == "full" and ng
+                and self.stored_rows < self.q.store_cap):
+            self.sat_a.append(np.stack([a[good] for a in a_list], axis=-1))
+            self.sat_b.append(b_int[good])
+            self.stored_rows += ng
+        if self.mode == "feasible" and self.best.ok:
+            self.done = True
+
+    def result(self) -> SegmentFit:
+        fit = self.best
+        fit.a_real = self.a_real
+        if fit.warm_hit:
+            return fit
+        fit.n_satisfying = self.n_sat
+        fit.evals = self.evals
+        fit.truncated = self.truncated
+        if self.mode == "full" and self.sat_a:
+            fit.a_candidates = np.concatenate(self.sat_a)[: self.q.store_cap]
+            fit.b_candidates = np.concatenate(self.sat_b)[: self.q.store_cap]
+        return fit
 
 
 class Quantizer:
-    """Base: candidate generation differs, evaluation is shared."""
+    """Base: candidate generation differs, evaluation is shared.
+
+    ``backend`` selects the :mod:`~repro.core.searchspace` execution
+    backend for the candidate blocks (numpy golden / jitted jax); the scan
+    itself — and therefore every returned fit — is backend-independent.
+    """
 
     name = "base"
     #: error-flatten the intercept (Alg.1 lines 7-9).  PLAC quantizes the
     #: software-fitted b directly instead [26].
     flatten_b = True
 
-    def __init__(self, chunk: int = 64, store_cap: int = 8192):
+    #: cap on the total candidate count of one fused lookahead dispatch —
+    #: bounds how much speculative work an early exit can discard (order-2
+    #: chunks hit the cap alone, so only their warm probe is fused in).
+    LOOKAHEAD_CAND_CAP = 4096
+
+    def __init__(self, chunk: int = 64, store_cap: int = 8192,
+                 backend: "str | SearchBackend | None" = None,
+                 lookahead: int = 0):
         self.chunk = chunk
         self.store_cap = store_cap
+        self.search = resolve_backend(backend)
+        #: feasible-scan speculative depth: fuse the warm probe and up to
+        #: ``1 + lookahead`` chunks into one dispatch, consuming in order
+        #: and discarding everything past the early exit — results and
+        #: counters are bit-identical to the sequential scan; only the
+        #: dispatch count (and some discarded device lanes) changes.
+        self.lookahead = int(lookahead)
 
     # -- candidate generation (override) -------------------------------------
     def _candidates(self, a_real: np.ndarray, cfg: FWLConfig
@@ -75,6 +244,29 @@ class Quantizer:
         raise NotImplementedError
 
     # -- shared evaluation ----------------------------------------------------
+    def _start_scan(self, x_int, f_vals, cfg, mae_t, mode, a_real, a_warm,
+                    max_chunks: Optional[int] = None
+                    ) -> Tuple[_SegmentScan, SegmentContext]:
+        n = cfg.order
+        b_real = None
+        if a_real is None:
+            x_f = x_int.astype(np.float64) / (1 << cfg.w_in)
+            coeffs, b_real = fit_minimax(x_f, f_vals, degree=n)
+            a_real = np.asarray(coeffs, dtype=np.float64)
+        cands = self._candidates(a_real, cfg)
+        b_fixed = 0
+        if not self.flatten_b:
+            if b_real is None:
+                x_f = x_int.astype(np.float64) / (1 << cfg.w_in)
+                _, b_real = fit_minimax(x_f, f_vals, degree=n)
+            b_fixed = int(round_half_away(b_real * (1 << cfg.w_b)))
+        ctx = self.search.context(x_int, f_vals, cfg,
+                                  flatten_b=self.flatten_b, b_fixed=b_fixed)
+        scan = _SegmentScan(self, ctx, cands, mae_t, mode, a_warm,
+                            max_chunks=max_chunks)
+        scan.a_real = np.asarray(a_real, dtype=np.float64)
+        return scan, ctx
+
     def fit_segment(
         self,
         x_int: np.ndarray,
@@ -101,123 +293,106 @@ class Quantizer:
             normal scan runs.  Feasibility decisions are unchanged either
             way — a warm hit just proves existence with one eval.
         """
-        n = cfg.order
-        G = x_int.size
-        b_real = None
-        if a_real is None:
-            x_f = x_int.astype(np.float64) / (1 << cfg.w_in)
-            coeffs, b_real = fit_minimax(x_f, f_vals, degree=n)
-            a_real = np.asarray(coeffs, dtype=np.float64)
+        scan, ctx = self._start_scan(x_int, f_vals, cfg, mae_t, mode,
+                                     a_real, a_warm)
+        if mode == "feasible" and self.lookahead > 0:
+            # speculative lookahead: fetch the warm probe plus the next
+            # chunks together, dispatch them fused, and stop consuming at
+            # the early exit — unconsumed results are simply discarded, so
+            # the fit (and every counter) is bit-identical to the
+            # sequential scan below.
+            while not scan.done:
+                blocks = []
+                cands = 0
+                while len(blocks) < 2 + self.lookahead \
+                        and cands < self.LOOKAHEAD_CAND_CAP:
+                    blk = scan.next_block()
+                    if blk is None:
+                        break
+                    blocks.append(blk)
+                    cands += blk[0].size
+                if not blocks:
+                    break
+                for out in self.search.eval_block_batch(ctx, blocks):
+                    scan.consume(*out)
+                    if scan.best.ok:    # satisfied: the sequential scan
+                        break           # would never evaluate the rest
+                scan._pending.clear()   # discard past the early exit
+        elif mode == "feasible":
+            # early exit possible: blocks must be evaluated one by one
+            while True:
+                blk = scan.next_block()
+                if blk is None:
+                    break
+                scan.consume(*self.search.eval_block(ctx, blk))
+        else:
+            # no early exit ("best"/"full" scan the whole space): queue
+            # every chunk and let the backend fuse them into grouped
+            # dispatches; results are consumed in chunk order, so the fit
+            # (argmin ties, store order, counters) is unchanged.
+            blocks = []
+            while True:
+                blk = scan.next_block()
+                if blk is None:
+                    break
+                blocks.append(blk)
+            for out in self.search.eval_block_batch(ctx, blocks):
+                scan.consume(*out)
+        return scan.result()
 
-        cands = self._candidates(a_real, cfg)
-        sizes = [c.size for c in cands]
-        if any(s == 0 for s in sizes):
-            return SegmentFit(False, np.inf, tuple(0 for _ in range(n)), 0)
+    def fit_segments(
+        self,
+        windows: Sequence[Tuple[np.ndarray, np.ndarray]],
+        cfg: FWLConfig,
+        mae_t: float,
+        mode: str = "feasible",
+        warms: Optional[Sequence[Optional[Tuple[int, ...]]]] = None,
+        max_chunks: Optional[Sequence[Optional[int]]] = None,
+        a_reals: Optional[Sequence[Optional[np.ndarray]]] = None,
+    ) -> List[SegmentFit]:
+        """Fit several windows in lockstep, dispatching each round's
+        candidate blocks as ONE multi-window backend call.
 
-        f_q = round_half_away(f_vals * (1 << cfg.w_out)).astype(np.float64) \
-            / (1 << cfg.w_out)
+        Windows advance independently (warm short-circuit, chunk order,
+        early exit), so every per-window :class:`SegmentFit` — counters
+        included — is bit-identical to a solo :meth:`fit_segment` call;
+        only the dispatches are fused.  This is the execution primitive
+        behind TBW speculative probe batching
+        (:meth:`repro.compiler.memo.MemoizedSegmentEvaluator.prefetch`).
 
-        def eval_block(a_list):
-            """Evaluate K candidate sets -> (mae (K,), b_int (K,), y (K,G))."""
-            nonlocal b_real
-            K = a_list[0].size
-            _, (hp, w_pre) = _horner_pre_b(a_list, x_int, cfg)
-            if self.flatten_b:
-                # error-flatten the intercept per candidate (Alg.1 lines 7-9)
-                e0 = f_vals[None, :] - hp.astype(np.float64) / (1 << w_pre)
-                b = 0.5 * (e0.max(axis=-1) + e0.min(axis=-1))
-                b_int = round_half_away(b * (1 << cfg.w_b))
-            else:
-                if b_real is None:
-                    x_f = x_int.astype(np.float64) / (1 << cfg.w_in)
-                    _, b_real = fit_minimax(x_f, f_vals, degree=n)
-                b_int = np.full(K, round_half_away(b_real * (1 << cfg.w_b)),
-                                dtype=np.int64)
-            out, w_sum = concat_add(hp, w_pre, b_int[:, None], cfg.w_b)
-            out = trunc_shift(out, w_sum - cfg.w_out)
-            y = out.astype(np.float64) / (1 << cfg.w_out)
-            return np.abs(f_vals[None, :] - y).max(axis=-1), b_int, y
-
-        evals = 0
-
-        # warm start: a candidate that was good for an overlapping window is
-        # usually still good here; it must lie inside *this* segment's
-        # candidate space so feasibility semantics stay identical.
-        if (a_warm is not None and mode == "feasible" and len(a_warm) == n
-                and all((cands[i] == int(a_warm[i])).any() for i in range(n))):
-            a_list = [np.asarray([int(v)], dtype=np.int64) for v in a_warm]
-            mae_w, b_w, y_w = eval_block(a_list)
-            evals += 1
-            if mae_w[0] <= mae_t + _EPS:
-                return SegmentFit(
-                    ok=True, mae=float(mae_w[0]),
-                    a_int=tuple(int(v) for v in a_warm), b_int=int(b_w[0]),
-                    mae0=float(np.abs(f_q - y_w[0]).max()),
-                    n_satisfying=1, evals=evals, warm_hit=True)
-
-        best = SegmentFit(False, np.inf, tuple(0 for _ in range(n)), 0)
-        sat_a: List[np.ndarray] = []
-        sat_b: List[np.ndarray] = []
-        n_sat = 0
-
-        # chunk over the first-stage candidates; later stages broadcast.
-        first = cands[0]
-        rest = cands[1:]
-        rest_grid = np.meshgrid(*rest, indexing="ij") if rest else []
-        rest_flat = [g.reshape(-1) for g in rest_grid]  # (R,) each
-        R = rest_flat[0].size if rest_flat else 1
-
-        for c0 in range(0, first.size, self.chunk):
-            a0 = first[c0: c0 + self.chunk]          # (C,)
-            C = a0.size
-            # build (C*R,) per-stage candidate vectors
-            a_list = [np.repeat(a0, R)]
-            for rf in rest_flat:
-                a_list.append(np.tile(rf, C))
-            K = C * R
-            evals += K
-
-            mae, b_int, y = eval_block(a_list)
-
-            k = int(np.argmin(mae))
-            if mae[k] < best.mae:
-                mae0 = float(np.abs(f_q[None, :] - y[k]).max())
-                best = SegmentFit(
-                    ok=bool(mae[k] <= mae_t + _EPS),
-                    mae=float(mae[k]),
-                    a_int=tuple(int(a[k]) for a in a_list),
-                    b_int=int(b_int[k]),
-                    mae0=mae0,
-                )
-            good = mae <= mae_t + _EPS
-            ng = int(good.sum())
-            n_sat += ng
-            if mode == "full" and ng and len(sat_a) * self.chunk <= self.store_cap:
-                sat_a.append(np.stack([a[good] for a in a_list], axis=-1))
-                sat_b.append(b_int[good])
-            if mode == "feasible" and best.ok:
+        ``max_chunks`` optionally budgets each window's scan (None =
+        unbounded): a budgeted window stops after that many candidate
+        chunks (warm probes are free) and, if it neither satisfied MAE_t
+        nor exhausted its space, returns a ``truncated`` fit — an upper
+        bound usable as a cache hint, never as an exhaustive verdict.
+        """
+        warms = warms if warms is not None else [None] * len(windows)
+        budgets = (max_chunks if max_chunks is not None
+                   else [None] * len(windows))
+        reals = a_reals if a_reals is not None else [None] * len(windows)
+        scans = [self._start_scan(x, f, cfg, mae_t, mode, real, warm,
+                                  max_chunks=budget)
+                 for (x, f), warm, budget, real
+                 in zip(windows, warms, budgets, reals)]
+        while True:
+            live = []
+            for scan, ctx in scans:
+                blk = scan.next_block()
+                if blk is not None:
+                    live.append((scan, ctx, blk))
+            if not live:
                 break
-
-        best.n_satisfying = n_sat
-        best.evals = evals
-        if mode == "full" and sat_a:
-            best.a_candidates = np.concatenate(sat_a)[: self.store_cap]
-            best.b_candidates = np.concatenate(sat_b)[: self.store_cap]
-        return best
+            outs = self.search.eval_block_multi(
+                [(ctx, blk) for _, ctx, blk in live])
+            for (scan, _, _), out in zip(live, outs):
+                scan.consume(*out)
+        return [scan.result() for scan, _ in scans]
 
     # -- helpers ---------------------------------------------------------------
     @staticmethod
     def _round_int(a_real: np.ndarray, w: Sequence[int]) -> List[int]:
         return [int(round_half_away(a * (1 << wi)))
                 for a, wi in zip(a_real, w)]
-
-
-def _horner_pre_b(a_list, x_int, cfg):
-    """horner_fixed with b=0, returning the pre-intercept value."""
-    zero_b = np.zeros(a_list[0].shape, dtype=np.int64)
-    out, pre = horner_fixed([np.asarray(a) for a in a_list], zero_b,
-                            x_int, cfg, return_pre_b=True)
-    return out, pre
 
 
 def _centered(lo: int, hi: int) -> np.ndarray:

@@ -41,15 +41,19 @@ class PPAScheme:
                 else f"O{self.order}")
         return f"{self.quantizer.upper()}-{base}"
 
-    def build_quantizer(self) -> Quantizer:
-        kw = {}
+    def build_quantizer(self, backend=None, lookahead: int = 0) -> Quantizer:
+        """``backend`` picks the searchspace execution backend (name or
+        instance) and ``lookahead`` the fused speculative-scan depth; both
+        are execution details, never part of the scheme's
+        identity/serialization — results are backend-independent."""
+        kw = {"lookahead": lookahead}
         if self.quantizer in ("fqa", "fqa_fast") and self.m_shifters:
             kw["weight_limit"] = self.m_shifters
             kw["weight_fn"] = (hamming_weight if self.weight == "hamming"
                                else min_signed_digits)
         if self.quantizer == "mlplac" and self.m_shifters:
             kw["m"] = self.m_shifters
-        return make_quantizer(self.quantizer, **kw)
+        return make_quantizer(self.quantizer, backend=backend, **kw)
 
 
 @dataclasses.dataclass

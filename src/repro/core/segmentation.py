@@ -71,6 +71,18 @@ class SegmentEvaluator:
         self.cand_evals += fit.evals
         return fit
 
+    def prefetch(self, windows: List[Tuple[int, int]],
+                 mode: str = "feasible") -> None:
+        """Hint that ``windows`` are about to be evaluated.
+
+        The plain evaluator has nowhere to keep speculative results, so
+        this is a no-op — TBW with ``speculate > 0`` simply degrades to
+        the sequential probe order.  The memoized evaluator
+        (:class:`repro.compiler.memo.MemoizedSegmentEvaluator`) overrides
+        it to fit all still-unanswered windows as one batched multi-window
+        dispatch and park the fits in its cache.
+        """
+
 
 def _finalize(ev: SegmentEvaluator, start: int, end: int,
               final_mode: str) -> Segment:
@@ -82,10 +94,74 @@ def _finalize(ev: SegmentEvaluator, start: int, end: int,
     return Segment(start, end, fit)
 
 
+def _tbw_successors(lp: int, rp: int, ep: int, rflag: int,
+                    interval: int, num: int
+                    ) -> Tuple[Optional[Tuple[int, int, int, int]],
+                               Optional[Tuple[int, int, int, int]]]:
+    """The two possible next inner-loop states after probing ``ep``.
+
+    A pure mirror of the transitions in :func:`tbw_segment`'s inner loop —
+    returns ``(on_success, on_failure)`` as ``(lp, rp, ep, rflag)`` tuples,
+    or None where the loop would exit (success at ``rp``) or raise (the
+    single-point-infeasible error path).  The speculative probe planner
+    walks this to know which windows the sequential flow can visit next.
+    """
+    if ep == rp:
+        ok_state = None                         # inner loop exits
+    else:
+        lp2 = ep
+        if rflag == 1 and ep <= num - 1 - interval:
+            ep2 = ep + interval
+        else:
+            ep2 = (lp2 + rp + 1) // 2
+        ok_state = (lp2, rp, ep2, rflag)
+    rp2 = rp - 1 if rp == lp + 1 else ep - 1
+    if rp2 < lp:
+        fail_state = None                       # would raise (infeasible)
+    else:
+        fail_state = (lp, rp2, (lp + rp2 + 1) // 2, 0)
+    return ok_state, fail_state
+
+
+def _speculative_windows(sp: int, lp: int, rp: int, ep: int, rflag: int,
+                         interval: int, num: int, depth: int
+                         ) -> List[Tuple[int, int]]:
+    """The probe about to run plus every window the inner loop can reach
+    within ``depth`` further steps: the grow window and the bisection
+    midpoints it would visit on failure, deduplicated, probe-order first."""
+    wins = [(sp, ep)]
+    seen = {(sp, ep)}
+    frontier = [(lp, rp, ep, rflag)]
+    for _ in range(depth):
+        nxt = []
+        for state in frontier:
+            for succ in _tbw_successors(*state, interval=interval, num=num):
+                if succ is None:
+                    continue
+                nxt.append(succ)
+                w = (sp, succ[2])
+                if w not in seen:
+                    seen.add(w)
+                    wins.append(w)
+        frontier = nxt
+    return wins
+
+
 def tbw_segment(ev: SegmentEvaluator, tseg: int,
                 final_mode: str = "best",
-                max_segments: Optional[int] = None) -> List[Segment]:
-    """Target-guided bisection window segmentation (paper Fig. 5)."""
+                max_segments: Optional[int] = None,
+                speculate: int = 0) -> List[Segment]:
+    """Target-guided bisection window segmentation (paper Fig. 5).
+
+    ``speculate > 0`` turns on speculative probe batching: before each
+    inner-loop probe, the windows reachable within ``speculate`` further
+    steps (grow window + failure-path bisection midpoints) are prefetched
+    through ``ev.prefetch`` — one batched multi-window dispatch on a
+    memoized evaluator — so the sequential probes below become cache hits.
+    The control flow itself never changes: probes are still issued one by
+    one in the paper's order, so the chosen segments are identical to the
+    unbatched path (asserted in tests/test_searchspace.py).
+    """
     num = ev.num
     if tseg <= 0:
         raise ValueError("tseg must be positive")
@@ -105,6 +181,9 @@ def tbw_segment(ev: SegmentEvaluator, tseg: int,
             ep = (lp + rp + 1) // 2
         ep = max(ep, sp)
         while True:
+            if speculate > 0:
+                ev.prefetch(_speculative_windows(
+                    sp, lp, rp, ep, rflag, interval, num, speculate))
             fit = ev.evaluate(sp, ep, mode="feasible")
             if fit.ok:
                 if ep == rp:

@@ -1,0 +1,301 @@
+"""Search-backend bit-identity + TBW speculative probe batching (PR 5).
+
+The searchspace contract is that a backend can never change a result:
+
+  * the jitted jax backend returns bit-identical ``SegmentFit``s to the
+    numpy golden backend — a_int/b_int/mae/mae0/n_satisfying/evals and the
+    feasible/best/full mode semantics, the warm-start single-eval path,
+    and the full-mode candidate stores — across every quantizer and a NAF
+    zoo sample (order 1 and 2);
+  * ``compile_table`` artifacts are byte-identical across backends;
+  * TBW with speculative probe batching chooses identical segment lists
+    and keeps artifacts identical modulo the documented effort counters,
+    with monotone cache counters;
+  * full-mode ``store_cap`` counts actually-accumulated rows (the PR 5
+    satellite fix), not chunks.
+
+The jax-backed tests skip (with the reason) where jax x64 is unavailable.
+"""
+
+import numpy as np
+import pytest
+
+from repro.compiler import (CompilerSession, EFFORT_STAT_KEYS,
+                            MemoizedSegmentEvaluator, compile_table,
+                            table_identity)
+from repro.core import (FWLConfig, NAF_REGISTRY, PPAScheme,
+                        SegmentEvaluator, grid_for_interval,
+                        jax_backend_available, make_quantizer,
+                        resolve_backend, tbw_segment)
+from repro.core.functions import get_naf
+from repro.core.searchspace import (JaxSearchBackend, NumpySearchBackend,
+                                    SEARCH_BACKENDS)
+
+JAX_OK, JAX_WHY = jax_backend_available()
+needs_jax = pytest.mark.skipif(not JAX_OK,
+                               reason=f"jax backend unavailable: {JAX_WHY}")
+
+CFG1 = FWLConfig(7, 7, (7,), (7,), 7)
+CFG2 = FWLConfig(7, 7, (7, 7), (7, 7), 7)
+QUANTIZERS = ("fqa", "fqa_fast", "qpa", "plac", "mlplac")
+
+
+def _grid(naf="sigmoid", cfg=CFG1):
+    spec = get_naf(naf)
+    x = grid_for_interval(*spec.interval, cfg.w_in)
+    return x, spec(x.astype(np.float64) / (1 << cfg.w_in))
+
+
+def assert_fits_identical(a, b, full=False):
+    assert a.ok == b.ok
+    assert a.mae == b.mae                    # exact float equality
+    assert a.a_int == b.a_int
+    assert a.b_int == b.b_int
+    assert a.mae0 == b.mae0
+    assert a.n_satisfying == b.n_satisfying
+    assert a.evals == b.evals
+    assert a.warm_hit == b.warm_hit
+    if full:
+        if a.a_candidates is None:
+            assert b.a_candidates is None
+        else:
+            assert np.array_equal(a.a_candidates, b.a_candidates)
+            assert np.array_equal(a.b_candidates, b.b_candidates)
+
+
+# ------------------------------------------------------------ resolution
+def test_resolve_backend_names_and_env(monkeypatch):
+    assert resolve_backend(None).name == "numpy"
+    assert resolve_backend("numpy").name == "numpy"
+    inst = NumpySearchBackend()
+    assert resolve_backend(inst) is inst
+    monkeypatch.setenv("REPRO_SEARCH_BACKEND", "numpy")
+    assert resolve_backend(None).name == "numpy"
+    with pytest.raises(KeyError):
+        resolve_backend("no-such-backend")
+    assert set(SEARCH_BACKENDS) == {"numpy", "jax"}
+
+
+@needs_jax
+def test_resolve_backend_env_jax(monkeypatch):
+    monkeypatch.setenv("REPRO_SEARCH_BACKEND", "jax")
+    assert resolve_backend(None).name == "jax"
+
+
+# ------------------------------------------------------- fit bit-identity
+@needs_jax
+@pytest.mark.parametrize("mode", ["feasible", "best", "full"])
+@pytest.mark.parametrize("qname", QUANTIZERS)
+def test_backend_fit_identity_order1(qname, mode):
+    x, f = _grid()
+    mae_t = 0.5 ** 8
+    fit_np = make_quantizer(qname, backend="numpy").fit_segment(
+        x[3:40], f[3:40], CFG1, mae_t, mode=mode)
+    fit_jx = make_quantizer(qname, backend="jax").fit_segment(
+        x[3:40], f[3:40], CFG1, mae_t, mode=mode)
+    assert_fits_identical(fit_np, fit_jx, full=(mode == "full"))
+
+
+@needs_jax
+@pytest.mark.parametrize("mode", ["feasible", "best", "full"])
+def test_backend_fit_identity_order2_extended(mode):
+    x, f = _grid(cfg=CFG2)
+    mae_t = 0.5 ** 8
+    fit_np = make_quantizer("fqa", backend="numpy").fit_segment(
+        x[:24], f[:24], CFG2, mae_t, mode=mode)
+    fit_jx = make_quantizer("fqa", backend="jax").fit_segment(
+        x[:24], f[:24], CFG2, mae_t, mode=mode)
+    assert fit_np.evals == (3 * 2 ** 7 + 1) ** 2     # the o2 full space
+    assert_fits_identical(fit_np, fit_jx, full=(mode == "full"))
+
+
+@needs_jax
+@pytest.mark.parametrize("naf", sorted(NAF_REGISTRY))
+def test_backend_fit_identity_naf_zoo(naf):
+    x, f = _grid(naf)
+    width = min(40, x.size - 1)
+    for mae_t in (0.5 ** 8, 0.5 ** 5):       # one tight, one loose target
+        fit_np = make_quantizer("fqa", backend="numpy").fit_segment(
+            x[:width], f[:width], CFG1, mae_t, mode="feasible")
+        fit_jx = make_quantizer("fqa", backend="jax").fit_segment(
+            x[:width], f[:width], CFG1, mae_t, mode="feasible")
+        assert_fits_identical(fit_np, fit_jx)
+
+
+@needs_jax
+def test_backend_warm_start_single_eval_parity():
+    x, f = _grid()
+    mae_t = 0.5 ** 5                          # loose: warm start satisfies
+    seed = make_quantizer("fqa", backend="numpy").fit_segment(
+        x[0:12], f[0:12], CFG1, mae_t, mode="feasible")
+    assert seed.ok
+    fits = [make_quantizer("fqa", backend=b).fit_segment(
+                x[0:14], f[0:14], CFG1, mae_t, mode="feasible",
+                a_warm=seed.a_int)
+            for b in ("numpy", "jax")]
+    for fit in fits:
+        assert fit.warm_hit and fit.evals == 1 and fit.ok
+    assert_fits_identical(*fits)
+
+
+@needs_jax
+def test_fit_segments_lockstep_matches_solo():
+    """The batched multi-window driver returns the solo fits, counters
+    included, for every window — the invariant prefetch relies on."""
+    x, f = _grid()
+    mae_t = 0.5 ** 8
+    windows = [(3, 30), (3, 45), (10, 60), (40, 50)]
+    for backend in ("numpy", "jax"):
+        q = make_quantizer("fqa", backend=backend)
+        solo = [q.fit_segment(x[s:e + 1], f[s:e + 1], CFG1, mae_t)
+                for s, e in windows]
+        batched = q.fit_segments([(x[s:e + 1], f[s:e + 1])
+                                  for s, e in windows], CFG1, mae_t)
+        for a, b in zip(solo, batched):
+            assert_fits_identical(a, b)
+
+
+@needs_jax
+def test_lookahead_fit_identity():
+    """Fused lookahead dispatching never changes a feasible fit — results
+    past the early exit are discarded, counters included."""
+    x, f = _grid()
+    for backend in ("numpy", "jax"):
+        for mae_t in (0.5 ** 8, 0.5 ** 5):
+            plain = make_quantizer("fqa", backend=backend)
+            fused = make_quantizer("fqa", backend=backend, lookahead=3)
+            a = plain.fit_segment(x[3:50], f[3:50], CFG1, mae_t)
+            b = fused.fit_segment(x[3:50], f[3:50], CFG1, mae_t)
+            assert_fits_identical(a, b)
+
+
+# ------------------------------------------------- compile-level identity
+@needs_jax
+def test_compile_table_backend_byte_identical():
+    sch = PPAScheme(1, None, "fqa")
+    for naf in ("sigmoid", "exp2_frac"):
+        t_np = compile_table(naf, CFG1, sch, session=CompilerSession(),
+                             search_backend="numpy")
+        t_jx = compile_table(naf, CFG1, sch, session=CompilerSession(),
+                             search_backend="jax")
+        assert t_np.to_json() == t_jx.to_json()
+
+
+@needs_jax
+def test_compile_table_speculative_identity():
+    sch = PPAScheme(1, None, "fqa")
+    base = compile_table("sigmoid", CFG1, sch, session=CompilerSession())
+    for backend in ("numpy", "jax"):
+        spec = compile_table("sigmoid", CFG1, sch,
+                             session=CompilerSession(),
+                             search_backend=backend, speculate=2)
+        assert table_identity(base) == table_identity(spec)
+    # the effort counters are exactly the allowed divergence surface
+    assert set(EFFORT_STAT_KEYS) <= set(base.stats)
+
+
+# --------------------------------------------------- TBW speculation level
+@pytest.mark.parametrize("backend", ["numpy",
+                                     pytest.param("jax", marks=needs_jax)])
+def test_speculative_tbw_identical_segments(backend):
+    x, f = _grid()
+    mae_t = 0.5 ** 8
+    evs = {}
+    segs = {}
+    for spec in (0, 2):
+        q = make_quantizer("fqa", backend=backend, lookahead=spec)
+        ev = MemoizedSegmentEvaluator(x, f, CFG1, q, mae_t)
+        segs[spec] = tbw_segment(ev, tseg=16, speculate=spec)
+        evs[spec] = ev
+    flat = {k: [(s.start, s.end, s.fit.a_int, s.fit.b_int, s.fit.mae,
+                 s.fit.mae0) for s in v] for k, v in segs.items()}
+    assert flat[0] == flat[2]
+    # cache counters: monotone, same logical request stream
+    assert evs[2].calls == evs[0].calls
+    assert evs[2].hits >= evs[0].hits
+    for ev in evs.values():
+        for k in ("calls", "hits", "misses", "pruned", "warm_hits",
+                  "spec_windows", "cand_evals", "points_touched"):
+            assert getattr(ev, k) >= 0
+
+
+def test_speculative_tbw_plain_evaluator_degrades():
+    """On the cache-less evaluator prefetch is a no-op and speculation
+    falls back to the sequential probe order, bit-identically."""
+    x, f = _grid()
+    mae_t = 0.5 ** 8
+    seq = tbw_segment(SegmentEvaluator(x, f, CFG1, make_quantizer("fqa"),
+                                       mae_t), tseg=16)
+    spec = tbw_segment(SegmentEvaluator(x, f, CFG1, make_quantizer("fqa"),
+                                        mae_t), tseg=16, speculate=2)
+    assert [(s.start, s.end, s.fit.a_int, s.fit.b_int) for s in seq] \
+        == [(s.start, s.end, s.fit.a_int, s.fit.b_int) for s in spec]
+
+
+# ------------------------------------------------------ store_cap satellite
+def test_full_mode_store_cap_counts_rows():
+    """The cap bounds *rows actually accumulated*: with a loose target the
+    store holds exactly min(n_satisfying, store_cap) rows — the chunk-count
+    guard used to stop early (order-1) or buffer far past the cap before
+    slicing (extended order-2)."""
+    x, f = _grid()
+    mae_t = 0.5 ** 3        # very loose: nearly every candidate satisfies
+    q = make_quantizer("fqa", chunk=4, store_cap=10)
+    fit = q.fit_segment(x[0:12], f[0:12], CFG1, mae_t, mode="full")
+    assert fit.n_satisfying > 10
+    assert fit.a_candidates.shape == (10, 1)
+    assert fit.b_candidates.shape == (10,)
+
+    # under the cap nothing is trimmed
+    q2 = make_quantizer("fqa", chunk=4, store_cap=10 ** 6)
+    fit2 = q2.fit_segment(x[0:12], f[0:12], CFG1, mae_t, mode="full")
+    assert fit2.a_candidates.shape == (fit2.n_satisfying, 1)
+
+
+def test_full_mode_store_rows_match_scan_order():
+    """The stored rows are the first store_cap satisfying candidates in
+    scan order — invariant across chunk sizes (the fix must not reorder)."""
+    x, f = _grid()
+    mae_t = 0.5 ** 4
+    fits = [make_quantizer("fqa", chunk=c, store_cap=64).fit_segment(
+        x[0:12], f[0:12], CFG1, mae_t, mode="full") for c in (4, 64)]
+    n = min(f.a_candidates.shape[0] for f in fits)
+    assert n > 0
+    assert np.array_equal(fits[0].a_candidates[:n], fits[1].a_candidates[:n])
+    assert np.array_equal(fits[0].b_candidates[:n], fits[1].b_candidates[:n])
+
+
+# -------------------------------------------------------- hypothesis sweep
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYP = True
+except ImportError:          # pragma: no cover - optional dependency
+    HAVE_HYP = False
+
+if HAVE_HYP and JAX_OK:
+    @st.composite
+    def windows(draw):
+        cfg = CFG2 if draw(st.booleans()) else CFG1
+        start = draw(st.integers(0, 80))
+        width = draw(st.integers(1, 24 if cfg is CFG2 else 48))
+        naf = draw(st.sampled_from(["sigmoid", "tanh", "exp2_frac",
+                                    "recip"]))
+        mae_t = 0.5 ** draw(st.integers(4, 9))
+        mode = draw(st.sampled_from(["feasible", "best", "full"]))
+        qname = draw(st.sampled_from(list(QUANTIZERS)))
+        return cfg, start, width, naf, mae_t, mode, qname
+
+    @settings(max_examples=25, deadline=None)
+    @given(params=windows())
+    def test_backend_identity_property(params):
+        cfg, start, width, naf, mae_t, mode, qname = params
+        spec = get_naf(naf)
+        x = grid_for_interval(*spec.interval, cfg.w_in)
+        f = spec(x.astype(np.float64) / (1 << cfg.w_in))
+        start = min(start, x.size - 2)
+        end = min(start + width, x.size - 1)
+        fit_np = make_quantizer(qname, backend="numpy").fit_segment(
+            x[start:end + 1], f[start:end + 1], cfg, mae_t, mode=mode)
+        fit_jx = make_quantizer(qname, backend="jax").fit_segment(
+            x[start:end + 1], f[start:end + 1], cfg, mae_t, mode=mode)
+        assert_fits_identical(fit_np, fit_jx, full=(mode == "full"))
