@@ -1,0 +1,202 @@
+"""Serving-tier load benchmark: latency + throughput vs concurrent clients.
+
+Closed-loop load generator over the continuous-batching engine: ``c``
+concurrent clients each keep one request in flight for ``--rounds``
+rounds (mixed prompt lengths, so the coalescer sees realistic buckets).
+Per client count it measures
+
+  * **coalesced vs serial admission** — micro-batched, length-bucketed
+    prefill + batched sampling against the per-request batch=1 baseline.
+    Both engines are warmed with one untimed round first, so the
+    comparison is steady-state throughput, not tracing.  At >= 4
+    concurrent clients the coalesced engine must win tokens/sec
+    (asserted — this is the PR's acceptance bar).
+  * request latency p50/p99 and first-token latency p50 (seconds,
+    submit -> done / submit -> first token).
+
+Separately it measures **warm vs cold tenant start** through the
+multi-tenant front: a warm tenant pays table resolution + pinning + jit
+tracing at admission (``TenantFront.add_tenant``), a cold tenant pays it
+inline on its first request.  Warm first-token latency must come in
+below cold (asserted).  Table artifacts resolve through the shared
+store's disk tier, so neither side recompiles tables.
+
+Every row lands in ``BENCH_serve.json`` via :mod:`benchmarks.common`.
+``--smoke`` shrinks client counts and token budgets to the CI shape
+(wired into ``scripts/ci.sh serve-smoke``).
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from typing import List
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, write_json
+from repro.compiler import TableStore
+from repro.configs import get_config, get_smoke_config
+from repro.models import init_params, param_specs
+from repro.serve import Request, ServeEngine, TenantFront, TenantSpec
+
+PROMPT_LENS = (5, 8, 12, 16, 7, 24)     # cycled per request
+
+
+def make_request(cfg, rid: int, max_new: int, rng: np.random.Generator
+                 ) -> Request:
+    lp = PROMPT_LENS[rid % len(PROMPT_LENS)]
+    return Request(rid=rid,
+                   prompt=rng.integers(0, cfg.vocab, lp).astype(np.int32),
+                   max_new_tokens=max_new)
+
+
+def run_closed_loop(eng: ServeEngine, cfg, clients: int, rounds: int,
+                    max_new: int, seed: int = 0):
+    """Each of ``clients`` keeps one request in flight, ``rounds`` times."""
+    rng = np.random.default_rng(seed)
+    budget = [rounds] * clients
+    live: dict = {}
+    reqs: List[Request] = []
+    rid = 0
+    t0 = time.perf_counter()
+    for cid in range(clients):
+        r = make_request(cfg, rid, max_new, rng)
+        rid += 1
+        reqs.append(r)
+        live[cid] = r
+        eng.submit(r)
+        budget[cid] -= 1
+    steps = 0
+    while live:
+        eng.step()
+        steps += 1
+        if steps > 100_000:
+            raise RuntimeError("load loop did not drain")
+        for cid, r in list(live.items()):
+            if not r.done:
+                continue
+            if budget[cid] > 0:
+                nr = make_request(cfg, rid, max_new, rng)
+                rid += 1
+                reqs.append(nr)
+                live[cid] = nr
+                eng.submit(nr)
+                budget[cid] -= 1
+            else:
+                live.pop(cid)
+    dt = time.perf_counter() - t0
+    return reqs, dt
+
+
+def summarize(reqs: List[Request], dt: float) -> dict:
+    lat = np.asarray([r.t_done - r.t_submit for r in reqs])
+    first = np.asarray([r.t_first - r.t_submit for r in reqs])
+    toks = sum(len(r.output) for r in reqs)
+    return {
+        "requests": len(reqs), "tokens": toks,
+        "tokens_per_s": round(toks / dt, 2),
+        "lat_p50_s": round(float(np.percentile(lat, 50)), 4),
+        "lat_p99_s": round(float(np.percentile(lat, 99)), 4),
+        "first_tok_p50_s": round(float(np.percentile(first, 50)), 4),
+        "wall_s": round(dt, 3),
+    }
+
+
+def bench_admission(cfg, params, client_counts, rounds, max_new,
+                    n_slots, cache_len) -> List[str]:
+    """Coalesced vs serial closed-loop load; returns failed assertions."""
+    failures = []
+    for clients in client_counts:
+        stats = {}
+        for mode, coalesce in (("serial", False), ("coalesced", True)):
+            eng = ServeEngine(cfg, params, n_slots=n_slots,
+                              cache_len=cache_len, coalesce=coalesce)
+            # untimed warm round: steady-state comparison, not tracing
+            run_closed_loop(eng, cfg, clients, 1, max_new, seed=99)
+            reqs, dt = run_closed_loop(eng, cfg, clients, rounds, max_new)
+            s = summarize(reqs, dt)
+            if coalesce:
+                s["prefill_retraces"] = eng.prefill_retraces
+            stats[mode] = s
+            emit(f"serve_load[c={clients},{mode}]",
+                 us_per_call=dt * 1e6 / max(s["tokens"], 1), **s)
+        ratio = stats["coalesced"]["tokens_per_s"] / \
+            max(stats["serial"]["tokens_per_s"], 1e-9)
+        emit(f"serve_load[c={clients},speedup]", coalesced_over_serial=round(
+            ratio, 3))
+        if clients >= 4 and ratio <= 1.0:
+            failures.append(
+                f"coalesced admission did not beat serial at c={clients}: "
+                f"{stats['coalesced']['tokens_per_s']} vs "
+                f"{stats['serial']['tokens_per_s']} tok/s")
+    return failures
+
+
+def bench_tenant_start(cfg, params, max_new) -> List[str]:
+    """Warm vs cold tenant first-token latency through the front."""
+    results = {}
+    for mode in ("cold", "warm"):
+        store = TableStore()        # shared artifact dir: loads, no compiles
+        front = TenantFront(store)
+        spec = TenantSpec(name=mode, cfg=cfg, params=params, n_slots=2,
+                          cache_len=64,
+                          warm_prompt_lens=(PROMPT_LENS[0],))
+        rep = front.add_tenant(spec, warm=(mode == "warm"))
+        rng = np.random.default_rng(3)
+        req = make_request(cfg, 0, max_new, rng)
+        front.submit(mode, req)
+        front.run_until_drained()
+        first = req.t_first - req.t_submit
+        results[mode] = first
+        emit(f"serve_tenant[{mode}]", first_tok_s=round(first, 4),
+             warmup_s=rep["warmup_s"], tables_pinned=rep["tables_pinned"],
+             warm_traces=rep["warm_traces"])
+    if results["warm"] >= results["cold"]:
+        return [f"warm tenant first-token latency not below cold: "
+                f"{results['warm']:.4f}s vs {results['cold']:.4f}s"]
+    return []
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="internlm2-1.8b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--clients", type=int, nargs="*", default=None)
+    ap.add_argument("--rounds", type=int, default=None)
+    ap.add_argument("--max-new", type=int, default=None)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--cache-len", type=int, default=64)
+    ap.add_argument("--act-impl", default="ppa",
+                    choices=["exact", "ppa", "ppa8"])
+    ap.add_argument("--out", default="BENCH_serve.json")
+    args = ap.parse_args()
+
+    clients = args.clients or ([1, 4] if args.smoke else [1, 2, 4, 8])
+    rounds = args.rounds or (1 if args.smoke else 2)
+    max_new = args.max_new or (4 if args.smoke else 16)
+
+    cfg = (get_smoke_config(args.arch) if args.smoke
+           else get_config(args.arch))
+    cfg = dataclasses.replace(cfg, act_impl=args.act_impl)
+    params = init_params(param_specs(cfg), jax.random.PRNGKey(0))
+
+    failures = bench_admission(cfg, params, clients, rounds, max_new,
+                               args.slots, args.cache_len)
+    failures += bench_tenant_start(cfg, params, max_new)
+
+    path = write_json(args.out, smoke=args.smoke, arch=args.arch,
+                      act_impl=args.act_impl, clients=clients,
+                      rounds=rounds, max_new=max_new, slots=args.slots)
+    print(f"wrote {path}")
+    if failures:
+        for f in failures:
+            print(f"FAIL: {f}")
+        raise SystemExit(1)
+    print("serve_load: all acceptance checks passed")
+
+
+if __name__ == "__main__":
+    main()

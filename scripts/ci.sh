@@ -27,6 +27,14 @@
 #                         on the order-2 extended FQA grid (the benchmark
 #                         prints a skip notice where jax x64 is
 #                         unavailable)
+#   scripts/ci.sh serve-smoke
+#                         serving tier: the serve test file (coalesced
+#                         admission bit-identity vs the serial path,
+#                         tenant pin/evict vs store LRU, retrace bound)
+#                         plus the load benchmark in smoke shape — the
+#                         coalesced engine must beat serial tokens/sec
+#                         at >= 4 concurrent clients and a warm tenant's
+#                         first token must land before a cold one's
 #   scripts/ci.sh docs-check
 #                         every python snippet in docs/*.md parses and
 #                         its imports resolve; intra-repo doc links are
@@ -57,6 +65,10 @@ case "$mode" in
     exec python -m benchmarks.search_throughput --smoke \
          --out BENCH_search.json
     ;;
+  serve-smoke)
+    python -m pytest -q tests/test_serve.py "$@" || exit 1
+    exec python -m benchmarks.serve_load --smoke --out BENCH_serve.json
+    ;;
   docs-check)
     exec python scripts/docs_check.py "$@"
     ;;
@@ -69,7 +81,7 @@ case "$mode" in
     ;;
   *)
     echo "usage: scripts/ci.sh" \
-         "[tier1|fast|bench-smoke|sweep-smoke|search-smoke|docs-check]" \
+         "[tier1|fast|bench-smoke|sweep-smoke|search-smoke|serve-smoke|docs-check]" \
          "[extra args...]" >&2
     exit 2
     ;;

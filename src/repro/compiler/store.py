@@ -124,6 +124,13 @@ class TableStore:
     in-process copy — the disk tier still holds the artifact, so a re-access
     costs one JSON parse, never a recompile.  The disk tier is bounded
     separately and explicitly via :meth:`prune`.
+
+    **Pinning** (the multi-tenant serving contract): :meth:`pin` marks a
+    key exempt from memory-tier eviction — pinned entries neither count
+    against ``max_entries`` nor are ever chosen as eviction victims, so a
+    tenant's warmed table set stays a dict lookup away no matter how many
+    other tenants churn the tier.  :meth:`unpin` returns the entry to
+    normal LRU life.
     """
 
     def __init__(self, root: "Optional[str | Path]" = None,
@@ -135,6 +142,7 @@ class TableStore:
         self.persist = persist
         self.max_entries = max_entries
         self._mem: Dict[str, PPATable] = {}
+        self._pinned: Dict[str, int] = {}   # key -> pin refcount
         self.hits_mem = 0
         self.hits_disk = 0
         self.misses = 0
@@ -154,12 +162,15 @@ class TableStore:
     # -- tiers -----------------------------------------------------------------
     def _remember(self, key: str, table: PPATable) -> None:
         """Insert/refresh ``key`` as the most-recently-accessed memory entry,
-        evicting the least-recently-accessed entries beyond ``max_entries``."""
+        evicting the least-recently-accessed *unpinned* entries beyond
+        ``max_entries`` (pinned entries are exempt and uncounted)."""
         self._mem.pop(key, None)
         self._mem[key] = table
         if self.max_entries is not None:
-            while len(self._mem) > self.max_entries:
-                self._mem.pop(next(iter(self._mem)))
+            unpinned = [k for k in self._mem if k not in self._pinned]
+            excess = len(unpinned) - self.max_entries
+            for victim in unpinned[:max(excess, 0)]:
+                self._mem.pop(victim)
                 self.evictions += 1
 
     def _lookup(self, job: CompileJob, key: str) -> Optional[PPATable]:
@@ -222,6 +233,38 @@ class TableStore:
     def put(self, job: CompileJob, table: PPATable) -> None:
         job = job.resolved()
         self._put(job, job.key(), table)
+
+    # -- pinning ---------------------------------------------------------------
+    def pin(self, job: CompileJob) -> str:
+        """Exempt ``job``'s table from memory-tier eviction.
+
+        Pins are *ref-counted* per key: two tenants sharing one NAF zoo
+        each pin the same keys, and the entry stays exempt until every
+        pinner has unpinned.  The entry itself need not be resident yet —
+        pinning is a property of the key, applied whenever the table is
+        (re)membered.  Returns the pinned store key.
+        """
+        key = job.resolved().key()
+        self._pinned[key] = self._pinned.get(key, 0) + 1
+        return key
+
+    def unpin(self, job: CompileJob) -> str:
+        """Drop one pin on ``job``'s table; at refcount zero the entry
+        returns to normal LRU residency (and the cap re-applies now)."""
+        key = job.resolved().key()
+        n = self._pinned.get(key, 0) - 1
+        if n > 0:
+            self._pinned[key] = n
+            return key
+        self._pinned.pop(key, None)
+        # re-apply the cap now that this entry counts against it again
+        if self._mem:
+            last = next(reversed(self._mem))
+            self._remember(last, self._mem[last])
+        return key
+
+    def pinned_keys(self) -> frozenset:
+        return frozenset(self._pinned)
 
     # -- the entrypoint --------------------------------------------------------
     def compile_or_load(self, naf: str, cfg: FWLConfig,
@@ -558,7 +601,8 @@ class TableStore:
     def stats(self) -> Dict[str, int]:
         return {"hits_mem": self.hits_mem, "hits_disk": self.hits_disk,
                 "misses": self.misses, "in_memory": len(self._mem),
-                "evictions": self.evictions, "compiles": self.compiles}
+                "evictions": self.evictions, "compiles": self.compiles,
+                "pinned": len(self._pinned)}
 
 
 _DEFAULT: Optional[TableStore] = None

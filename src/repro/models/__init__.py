@@ -1,7 +1,7 @@
 """repro.models — the architecture zoo with FQA-PPA activations as a
 first-class implementation choice."""
 
-from .activations import ActBundle, make_acts
+from .activations import ActBundle, make_acts, ppa_table_jobs
 from .common import (P, ShardCtx, abstract_params, count_params, init_params,
                      pad_to, param_axes, shard_hint, tree_bytes)
 from .config import ModelCfg, StageCfg
@@ -9,7 +9,7 @@ from .transformer import (decode_step, forward_hidden, init_cache, loss_fn,
                           make_model_acts, param_specs, prefill)
 
 __all__ = [
-    "ActBundle", "make_acts",
+    "ActBundle", "make_acts", "ppa_table_jobs",
     "P", "ShardCtx", "abstract_params", "count_params", "init_params",
     "pad_to", "param_axes", "shard_hint", "tree_bytes",
     "ModelCfg", "StageCfg",

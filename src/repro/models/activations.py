@@ -29,7 +29,7 @@ from repro.core import FWLConfig, PPAScheme
 from repro.kernels.ops import (TableConsts, pack_table, ppa_act,
                                ppa_gate_act, ppa_softmax)
 
-__all__ = ["ActBundle", "make_acts"]
+__all__ = ["ActBundle", "make_acts", "ppa_table_jobs"]
 
 Act = Callable[[jax.Array], jax.Array]
 
@@ -69,6 +69,31 @@ _CFG16 = FWLConfig(w_in=8, w_out=16, w_a=(8, 16), w_o=(16, 16), w_b=16)
 _CFG8 = FWLConfig(w_in=8, w_out=8, w_a=(8,), w_o=(8,), w_b=8)
 _SCHEME16 = PPAScheme(order=2, quantizer="fqa")
 _SCHEME8 = PPAScheme(order=1, m_shifters=4, quantizer="fqa")
+
+
+#: the NAF zoo a served model touches: gates + softmax exp2 + SSM/RWKV
+#: decays — one table each per deployment bit-width.
+_PPA_NAFS = ("sigmoid_wide", "tanh_wide", "gelu_inner", "softplus",
+             "exp_neg", "exp2_frac")
+
+
+def ppa_table_jobs(impl: str):
+    """The (naf, FWLConfig, PPAScheme) set an ``impl`` deployment needs.
+
+    This is the tenant warm-up contract: resolving each returned triple
+    through ``compile_or_load`` (and pinning it) guarantees the serving
+    hot path never compiles — or evicts — a table mid-request.  Empty for
+    the exact float impl.
+    """
+    if impl == "exact":
+        return []
+    if impl in ("ppa", "ppa16"):
+        cfg, scheme = _CFG16, _SCHEME16
+    elif impl == "ppa8":
+        cfg, scheme = _CFG8, _SCHEME8
+    else:
+        raise ValueError(f"unknown activation impl {impl!r}")
+    return [(naf, cfg, scheme) for naf in _PPA_NAFS]
 
 
 @functools.lru_cache(maxsize=None)

@@ -490,9 +490,16 @@ def _make_prefill_block(cfg: ModelCfg, stage: StageCfg, acts, ctx,
 
 
 def prefill(params, cfg: ModelCfg, batch, cache_len: int, acts: ActBundle,
-            ctx: ShardCtx, cache_dtype=jnp.bfloat16
+            ctx: ShardCtx, cache_dtype=jnp.bfloat16,
+            last_idx: Optional[jax.Array] = None
             ) -> Tuple[jax.Array, dict]:
-    """Run the full prompt once; return (last-token logits, decode cache)."""
+    """Run the full prompt once; return (last-token logits, decode cache).
+
+    ``last_idx`` (B,) selects each row's last *real* token position in the
+    concatenated sequence (vision prefix included) — the coalesced serving
+    path pads prompts to shared length buckets, so row ``b``'s final
+    logits live at ``last_idx[b]``, not at ``-1``.  None keeps the
+    uniform-length behaviour (every row reads position ``T-1``)."""
     params = _cast_params(params, cfg)
     tokens = batch["tokens"]
     h = embed_lookup(params["embed"], tokens, ctx)
@@ -521,4 +528,8 @@ def prefill(params, cfg: ModelCfg, batch, cache_len: int, acts: ActBundle,
         cache[key] = extras
     h = _norm(cfg, h, params["ln_f"])
     head = params.get("lm_head", params["embed"])
-    return lm_head_logits(h[:, -1], head), cache
+    if last_idx is None:
+        last = h[:, -1]
+    else:
+        last = h[jnp.arange(b), last_idx]
+    return lm_head_logits(last, head), cache

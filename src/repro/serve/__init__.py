@@ -1,5 +1,7 @@
-"""repro.serve — slot-based continuous-batching engine."""
+"""repro.serve — slot-based continuous-batching engine + multi-tenant
+front (coalesced prefill, batched sampling, warm pinned table sets)."""
 
 from .engine import Request, ServeEngine
+from .tenants import TenantFront, TenantSpec
 
-__all__ = ["Request", "ServeEngine"]
+__all__ = ["Request", "ServeEngine", "TenantFront", "TenantSpec"]

@@ -1,9 +1,33 @@
 """Serving engine: slot-based continuous batching over prefill/decode.
 
 A fixed decode batch of ``n_slots`` sequences shares one cache tree.
-Requests are admitted into free slots (prefilled individually, then their
-cache rows inserted with a batched dynamic update); every ``step()``
-decodes all active slots at once; finished sequences free their slot.
+Requests are admitted into free slots; every ``step()`` decodes all
+active slots at once; finished sequences free their slot.
+
+Two serving-tier optimisations make the engine multi-caller fast:
+
+* **Coalesced prefill** — admission drains the queue up to the free-slot
+  count, groups the drained requests into micro-batches padded to
+  power-of-two prompt-length buckets (the ``searchspace`` bucketing
+  policy, so ``jax.jit`` retraces stay bounded — and are counted in
+  ``prefill_retraces``), runs ONE batched prefill per group, and
+  scatters the resulting cache rows into the slots with one batched
+  insert.  Pad tokens sit *after* each prompt, so causal attention never
+  lets a real token see them, and each decode step overwrites the one
+  pad ring-slot that would otherwise become visible — tokens are
+  bit-identical to batch=1 admission.  Recurrent stages (SSM / RWKV)
+  carry prompt-order state, so those architectures coalesce by *exact*
+  length (batched, never padded); same for the flash-attention prefill
+  path, whose chunking depends on sequence length.
+
+* **Batched sampling** — one argmax over the full active-slot logits
+  batch (indexed on the host) plus at most one vmapped categorical for
+  the temperature slots, instead of a ``logits[i:i+1]`` device sync per
+  slot.  The per-slot RNG stream is preserved exactly: keys are split in
+  the order the per-slot loop would have split them, and a vmapped
+  ``jax.random.categorical`` over per-row keys produces the same bits as
+  the row-at-a-time calls.
+
 Sampling: greedy or temperature.  The PPA activation tables run inside
 both prefill and decode when the model config selects ``act_impl="ppa"``
 — serving *is* the paper's deployment scenario, so the engine resolves
@@ -14,8 +38,10 @@ engine processes sharing one artifact directory compiles each table once.
 
 from __future__ import annotations
 
+import collections
 import dataclasses
-from typing import Dict, List, Optional
+import time
+from typing import Deque, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -27,6 +53,20 @@ from repro.models import (ModelCfg, ShardCtx, decode_step, init_cache,
 
 __all__ = ["Request", "ServeEngine"]
 
+#: Smallest prompt-length bucket.  Below this every group shares one
+#: trace; above it buckets double, so distinct padded shapes stay
+#: O(log(max prompt len)).
+_BUCKET_FLOOR = 8
+
+
+def _bucket(n: int, lo: int = _BUCKET_FLOOR) -> int:
+    """Smallest power-of-two >= n, floored at ``lo`` — the padded-shape
+    policy ``repro.core.searchspace`` uses to bound jit retraces."""
+    b = lo
+    while b < n:
+        b <<= 1
+    return b
+
 
 @dataclasses.dataclass
 class Request:
@@ -35,16 +75,20 @@ class Request:
     max_new_tokens: int = 16
     temperature: float = 0.0
     extra: Optional[dict] = None       # enc_feats / vision_embeds
+    tenant: Optional[str] = None       # set by the multi-tenant front
     # filled by the engine:
     output: Optional[List[int]] = None
     done: bool = False
+    t_submit: Optional[float] = None   # perf_counter at submit()
+    t_first: Optional[float] = None    # first token emitted (admission)
+    t_done: Optional[float] = None     # last token emitted
 
 
 class ServeEngine:
     def __init__(self, cfg: ModelCfg, params, *, n_slots: int = 4,
                  cache_len: int = 256, ctx: Optional[ShardCtx] = None,
                  rng_seed: int = 0, table_store: Optional[TableStore] = None,
-                 act_backend: Optional[str] = None):
+                 act_backend: Optional[str] = None, coalesce: bool = True):
         # serving is the deployment hot path: ``act_backend`` overrides the
         # model config's activation execution backend (e.g. "pallas_fused"
         # to run quantize -> PPA -> dequantize -> gating in one kernel; see
@@ -71,46 +115,172 @@ class ServeEngine:
         self._decode = jax.jit(
             lambda p, c, t, pos: decode_step(p, cfg, c, t, pos, self.acts,
                                              self.ctx))
-        self.queue: List[Request] = []
+        self._prefill = jax.jit(
+            lambda p, batch, last: prefill(p, cfg, batch, cache_len,
+                                           self.acts, self.ctx,
+                                           last_idx=last))
+        self.queue: Deque[Request] = collections.deque()
+        self.coalesce = coalesce
+        # padding is only sound when no stage carries prompt-order state
+        # past the pads (SSM conv/h, RWKV time-mix) and prefill chunking
+        # does not depend on sequence length (flash); otherwise groups
+        # coalesce by exact prompt length — still batched, never padded.
+        self._paddable = (cfg.attn_impl == "dense" and
+                          all(st.kind not in ("hyb", "rwkv")
+                              for st in cfg.stages))
+        # pads must never enter a ring window: the serial path keeps the
+        # last `eff` *real* positions, so a padded sequence longer than
+        # the tightest window would evict real tokens in their favor.
+        self._min_eff = min((cache_len if st.window is None
+                             else min(st.window, cache_len))
+                            for st in cfg.stages)
+        self.prefill_retraces = 0           # distinct prefill shapes seen
+        self._prefill_shapes: set = set()
 
     # ----------------------------------------------------------- admission
     def submit(self, req: Request) -> None:
         req.output = []
+        if req.t_submit is None:        # the tenant front stamps earlier
+            req.t_submit = time.perf_counter()
         self.queue.append(req)
 
     def _free_slots(self) -> List[int]:
         return [i for i, r in enumerate(self.slot_req) if r is None]
 
-    def _admit(self) -> None:
-        for slot in self._free_slots():
-            if not self.queue:
-                break
-            req = self.queue.pop(0)
-            batch = {"tokens": jnp.asarray(req.prompt[None, :], jnp.int32)}
-            if req.extra:
-                batch.update({k: jnp.asarray(v[None]) for k, v in
-                              req.extra.items()})
-            logits, cache1 = prefill(self.params, self.cfg, batch,
-                                     self.cache_len, self.acts, self.ctx)
-            tok = self._sample(logits, req.temperature)[0]
-            self._insert_cache(slot, cache1)
-            t = len(req.prompt) + self.cfg.vision_tokens
-            self.pos[slot] = t
-            self.cur_tok[slot] = int(tok)
-            self.remaining[slot] = req.max_new_tokens - 1
-            req.output.append(int(tok))
-            self.slot_req[slot] = req
+    def _bucket_len(self, prompt_len: int) -> int:
+        """Padded token length for a prompt (== prompt_len when padding
+        is unsound for this config or would overflow a ring window)."""
+        if not self._paddable:
+            return prompt_len
+        b = _bucket(prompt_len)
+        if self.cfg.vision_tokens + b > self._min_eff:
+            return prompt_len
+        return b
 
-    def _insert_cache(self, slot: int, cache1) -> None:
-        """Write the (batch=1) prefill cache into the slot's row.
+    def _admit(self) -> None:
+        free = self._free_slots()
+        n = min(len(free), len(self.queue))
+        if n == 0:
+            return
+        # FIFO -> slot mapping identical to per-request admission
+        pairs = [(free[j], self.queue.popleft()) for j in range(n)]
+        # pre-split sampling keys in FIFO order: the RNG stream must not
+        # depend on how requests group into prefill micro-batches
+        keys: Dict[int, jax.Array] = {}
+        for _, req in pairs:
+            if req.temperature > 0:
+                self.rng, k = jax.random.split(self.rng)
+                keys[id(req)] = k
+        if not self.coalesce:
+            for slot, req in pairs:
+                self._admit_serial(slot, req, keys.get(id(req)))
+            return
+        groups: Dict[tuple, list] = {}
+        for slot, req in pairs:
+            sig = (self._bucket_len(len(req.prompt)),
+                   tuple(sorted(req.extra)) if req.extra else ())
+            groups.setdefault(sig, []).append((slot, req))
+        for (blen, _), members in groups.items():
+            self._admit_group(blen, members, keys)
+
+    def _admit_serial(self, slot: int, req: Request,
+                      key: Optional[jax.Array]) -> None:
+        """Batch=1 admission — the serial baseline path (and the exact
+        pre-coalescing engine behaviour the tests pin tokens against)."""
+        batch = {"tokens": jnp.asarray(req.prompt[None, :], jnp.int32)}
+        if req.extra:
+            batch.update({k: jnp.asarray(v[None]) for k, v in
+                          req.extra.items()})
+        logits, cache1 = prefill(self.params, self.cfg, batch,
+                                 self.cache_len, self.acts, self.ctx)
+        if key is None:
+            tok = int(np.asarray(jnp.argmax(logits, axis=-1))[0])
+        else:
+            tok = int(np.asarray(jax.random.categorical(
+                key, logits / req.temperature, axis=-1))[0])
+        self._insert_cache([slot], cache1, [0])
+        self._start_slot(slot, req, tok)
+
+    def _admit_group(self, blen: int, members: Sequence[Tuple[int, Request]],
+                     keys: Dict[int, jax.Array]) -> None:
+        """One batched prefill for every (slot, request) in ``members``,
+        padded on the right to the shared ``blen`` token bucket."""
+        g = len(members)
+        toks = np.zeros((g, blen), np.int32)
+        last = np.zeros((g,), np.int32)
+        for j, (_, req) in enumerate(members):
+            lp = len(req.prompt)
+            toks[j, :lp] = req.prompt
+            last[j] = self.cfg.vision_tokens + lp - 1
+        batch = {"tokens": jnp.asarray(toks)}
+        extra = members[0][1].extra
+        if extra:
+            for k in extra:
+                batch[k] = jnp.asarray(
+                    np.stack([req.extra[k] for _, req in members]))
+        sig = (blen, g, tuple(sorted(extra)) if extra else ())
+        if sig not in self._prefill_shapes:
+            self._prefill_shapes.add(sig)
+            self.prefill_retraces += 1
+        logits, cache1 = self._prefill(self.params, batch,
+                                       jnp.asarray(last))
+        toks_out = self._sample_rows(
+            logits,
+            [req.temperature for _, req in members],
+            [keys.get(id(req)) for _, req in members])
+        self._insert_cache([s for s, _ in members], cache1, list(range(g)))
+        for j, (slot, req) in enumerate(members):
+            self._start_slot(slot, req, int(toks_out[j]))
+
+    def _start_slot(self, slot: int, req: Request, tok: int) -> None:
+        t = len(req.prompt) + self.cfg.vision_tokens
+        self.pos[slot] = t
+        self.cur_tok[slot] = tok
+        self.remaining[slot] = req.max_new_tokens - 1
+        req.output.append(tok)
+        req.t_first = time.perf_counter()
+        self.slot_req[slot] = req
+
+    def _insert_cache(self, slots: Sequence[int], cache1,
+                      rows: Sequence[int]) -> None:
+        """Scatter prefill cache rows ``rows`` into slot rows ``slots``
+        with one batched dynamic update per cache leaf.
 
         Cache leaves have layout (L, B, ...) per stage."""
+        sl = jnp.asarray(np.asarray(slots, np.int32))
+        rw = jnp.asarray(np.asarray(rows, np.int32))
+
         def ins(full, one):
-            return full.at[:, slot].set(one[:, 0].astype(full.dtype))
+            return full.at[:, sl].set(one[:, rw].astype(full.dtype))
         self.cache = jax.tree_util.tree_map(ins, self.cache, cache1)
 
     # ------------------------------------------------------------ sampling
+    def _sample_rows(self, logits: jax.Array, temps: Sequence[float],
+                     keys: Sequence[Optional[jax.Array]]) -> np.ndarray:
+        """Sample one token per logits row (B, V) -> np (B,).
+
+        Greedy rows share ONE argmax launch and one host transfer;
+        temperature rows share one vmapped categorical over their per-row
+        keys (bit-identical to row-at-a-time ``jax.random.categorical``).
+        At most two device->host syncs regardless of row count.
+        """
+        out = np.zeros((len(temps),), np.int64)
+        t_rows = [j for j, k in enumerate(keys) if k is not None]
+        if len(t_rows) < len(temps):
+            out[:] = np.asarray(jnp.argmax(logits, axis=-1))
+        if t_rows:
+            idx = np.asarray(t_rows, np.int32)
+            kk = jnp.stack([keys[j] for j in t_rows])
+            tt = jnp.asarray(np.asarray([temps[j] for j in t_rows],
+                                        np.float32))
+            samp = jax.vmap(
+                lambda k, l, t: jax.random.categorical(k, l / t, axis=-1))(
+                    kk, logits[jnp.asarray(idx)], tt)
+            out[idx] = np.asarray(samp)
+        return out
+
     def _sample(self, logits: jax.Array, temperature: float) -> np.ndarray:
+        """Single-call sampling (kept for external callers/tests)."""
         if temperature <= 0:
             return np.asarray(jnp.argmax(logits, axis=-1))
         self.rng, k = jax.random.split(self.rng)
@@ -129,19 +299,78 @@ class ServeEngine:
         toks = jnp.asarray(self.cur_tok[:, None], jnp.int32)
         pos = jnp.asarray(self.pos, jnp.int32)
         logits, self.cache = self._decode(self.params, self.cache, toks, pos)
-        nxt = np.zeros((self.n_slots,), np.int32)
+        # split keys per active temperature slot, in slot order — the
+        # same stream the per-slot sampling loop consumed
+        temps: List[float] = []
+        keys: List[Optional[jax.Array]] = []
         for i in active:
+            t = self.slot_req[i].temperature
+            temps.append(t)
+            if t > 0:
+                self.rng, k = jax.random.split(self.rng)
+                keys.append(k)
+            else:
+                keys.append(None)
+        sampled = self._sample_rows(logits[jnp.asarray(active)], temps, keys)
+        nxt = np.zeros((self.n_slots,), np.int32)
+        now = time.perf_counter()
+        for j, i in enumerate(active):
             req = self.slot_req[i]
-            tok = self._sample(logits[i:i + 1], req.temperature)[0]
+            tok = int(sampled[j])
             nxt[i] = tok
-            req.output.append(int(tok))
+            req.output.append(tok)
             self.pos[i] += 1
             self.remaining[i] -= 1
             if self.remaining[i] <= 0:
                 req.done = True
+                req.t_done = now
                 self.slot_req[i] = None
         self.cur_tok = nxt
         return len(active)
+
+    # -------------------------------------------------------------- warmup
+    def warmup(self, prompt_lens: Sequence[int] = (), *,
+               batch: int = 1, decode: bool = True) -> int:
+        """Pre-trace the serving jits without touching engine state.
+
+        Runs one batched prefill per (bucketed) prompt length — which
+        also resolves and packs every activation table the model will
+        touch — plus one decode step whose outputs are discarded.  A
+        tenant warmed this way pays trace+table cost at admission, not on
+        its first request.  Returns the number of traces run.
+        """
+        n = 0
+        for lp in prompt_lens:
+            blen = self._bucket_len(lp)
+            batch_d = {"tokens": jnp.zeros((batch, blen), jnp.int32)}
+            extra_keys = []
+            if self.cfg.enc_layers:
+                extra_keys.append("enc_feats")
+                batch_d["enc_feats"] = jnp.zeros(
+                    (batch, self.cfg.enc_seq, self.cfg.d_model), jnp.float32)
+            if self.cfg.vision_tokens:
+                extra_keys.append("vision_embeds")
+                batch_d["vision_embeds"] = jnp.zeros(
+                    (batch, self.cfg.vision_tokens, self.cfg.d_model),
+                    jnp.float32)
+            sig = (blen, batch, tuple(sorted(extra_keys)))
+            if sig not in self._prefill_shapes:
+                self._prefill_shapes.add(sig)
+                self.prefill_retraces += 1
+            last = jnp.full((batch,),
+                            self.cfg.vision_tokens + min(lp, blen) - 1,
+                            jnp.int32)
+            logits, _ = self._prefill(self.params, batch_d, last)
+            jax.block_until_ready(logits)
+            n += 1
+        if decode:
+            logits, _ = self._decode(
+                self.params, self.cache,
+                jnp.zeros((self.n_slots, 1), jnp.int32),
+                jnp.zeros((self.n_slots,), jnp.int32))
+            jax.block_until_ready(logits)
+            n += 1
+        return n
 
     def run_until_drained(self, max_steps: int = 10_000) -> None:
         for _ in range(max_steps):

@@ -1,0 +1,193 @@
+"""Multi-tenant serving front: many deployments, one warm TableStore.
+
+The GRAU view of the paper — one reconfigurable PPA unit serving many
+functions — maps at the serving tier onto one :class:`TableStore` serving
+many tenant NAF zoos.  A :class:`TenantSpec` names a deployment (model
+config + activation impl/bit-widths + execution backend); admitting it
+through :meth:`TenantFront.add_tenant` runs the warm-up step:
+
+* every table in the tenant's NAF zoo (``repro.models.ppa_table_jobs``)
+  is resolved through the shared store via ``compile_or_load`` and
+  **pinned** — exempt from the memory-tier LRU, so other tenants' churn
+  can never push a live deployment's tables out of the dict tier;
+* the tenant's engine jits are pre-traced (``ServeEngine.warmup``), so
+  the first request pays neither XLA tracing nor table resolution.
+
+A tenant admitted with ``warm=False`` is *cold*: nothing is built until
+its first request is admitted, which then pays bundle construction
+(table loads) and jit tracing inline — the case the load benchmark
+measures warm admission against.
+
+Requests enter through :meth:`submit` tagged by tenant and are
+fair-shared: each scheduling pass hands every tenant with backlog one
+admission in rotating round-robin order, bounded by the per-engine free
+slots and the optional global ``max_active`` budget (tenants sharing one
+accelerator), so one chatty tenant cannot starve the rest.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Any, Deque, Dict, List, Optional, Sequence
+
+from repro.compiler import CompileJob, TableStore
+from repro.models import ModelCfg, ppa_table_jobs
+
+from .engine import Request, ServeEngine
+
+__all__ = ["TenantSpec", "TenantFront"]
+
+
+@dataclasses.dataclass
+class TenantSpec:
+    """One deployment: model + NAF zoo/bit-widths (via ``cfg.act_impl``)
+    + activation execution backend, served from a shared table store."""
+
+    name: str
+    cfg: ModelCfg
+    params: Any
+    n_slots: int = 4
+    cache_len: int = 256
+    act_backend: Optional[str] = None
+    rng_seed: int = 0
+    #: prompt-length buckets to pre-trace at admission (warm tenants)
+    warm_prompt_lens: Sequence[int] = (8,)
+
+
+class TenantFront:
+    def __init__(self, table_store: Optional[TableStore] = None, *,
+                 max_active: Optional[int] = None):
+        self.store = table_store if table_store is not None else TableStore()
+        self.max_active = max_active
+        self.specs: Dict[str, TenantSpec] = {}
+        self.engines: Dict[str, ServeEngine] = {}
+        self.pending: Dict[str, Deque[Request]] = {}
+        self.warmups: Dict[str, dict] = {}
+        self._rr: List[str] = []        # rotating fair-share order
+
+    # ------------------------------------------------------------ tenants
+    def add_tenant(self, spec: TenantSpec, *, warm: bool = True) -> dict:
+        """Register a tenant; with ``warm`` run the warm-up step now.
+
+        Returns the warm-up report: tables pinned, jit traces run, and
+        wall seconds spent — the cost the tenant's first request will NOT
+        pay."""
+        if spec.name in self.specs:
+            raise ValueError(f"tenant {spec.name!r} already admitted")
+        self.specs[spec.name] = spec
+        self.pending[spec.name] = collections.deque()
+        self._rr.append(spec.name)
+        t0 = time.perf_counter()
+        pinned = traces = 0
+        if warm:
+            for naf, fcfg, scheme in ppa_table_jobs(spec.cfg.act_impl):
+                self.store.compile_or_load(naf, fcfg, scheme)
+                self.store.pin(CompileJob(naf=naf, cfg=fcfg, scheme=scheme))
+                pinned += 1
+            eng = self._build_engine(spec)
+            traces = eng.warmup(spec.warm_prompt_lens)
+        report = {"tenant": spec.name, "warm": warm,
+                  "tables_pinned": pinned, "warm_traces": traces,
+                  "warmup_s": round(time.perf_counter() - t0, 4)}
+        self.warmups[spec.name] = report
+        return report
+
+    def remove_tenant(self, name: str) -> None:
+        """Retire a tenant: unpin its table set and drop its engine.
+
+        Refuses while the tenant still has queued or in-flight work."""
+        spec = self.specs[name]
+        eng = self.engines.get(name)
+        busy = bool(self.pending[name]) or (eng is not None and (
+            eng.queue or any(r is not None for r in eng.slot_req)))
+        if busy:
+            raise RuntimeError(f"tenant {name!r} still has work in flight")
+        for naf, fcfg, scheme in ppa_table_jobs(spec.cfg.act_impl):
+            self.store.unpin(CompileJob(naf=naf, cfg=fcfg, scheme=scheme))
+        self.engines.pop(name, None)
+        self.pending.pop(name)
+        self.specs.pop(name)
+        self._rr.remove(name)
+
+    def _build_engine(self, spec: TenantSpec) -> ServeEngine:
+        eng = ServeEngine(spec.cfg, spec.params, n_slots=spec.n_slots,
+                          cache_len=spec.cache_len, table_store=self.store,
+                          act_backend=spec.act_backend,
+                          rng_seed=spec.rng_seed)
+        self.engines[spec.name] = eng
+        return eng
+
+    def _engine(self, name: str) -> ServeEngine:
+        """The tenant's engine — built on first touch for cold tenants
+        (this is where a cold deployment pays its construction cost)."""
+        eng = self.engines.get(name)
+        if eng is None:
+            eng = self._build_engine(self.specs[name])
+        return eng
+
+    # ----------------------------------------------------------- requests
+    def submit(self, tenant: str, req: Request) -> None:
+        if tenant not in self.specs:
+            raise KeyError(f"unknown tenant {tenant!r}")
+        req.tenant = tenant
+        req.t_submit = time.perf_counter()
+        self.pending[tenant].append(req)
+
+    def active_slots(self) -> int:
+        """Occupied slots plus engine-queued requests across tenants."""
+        return sum(sum(r is not None for r in e.slot_req) + len(e.queue)
+                   for e in self.engines.values())
+
+    def _fair_admit(self) -> None:
+        """Move pending requests into tenant engines, one per tenant per
+        pass in rotating round-robin order, bounded by each engine's free
+        slots and the global ``max_active`` budget."""
+        budget = (None if self.max_active is None
+                  else self.max_active - self.active_slots())
+        progressed = True
+        while progressed and (budget is None or budget > 0):
+            progressed = False
+            for name in list(self._rr):
+                if budget is not None and budget <= 0:
+                    break
+                q = self.pending[name]
+                if not q:
+                    continue
+                eng = self._engine(name)
+                free = (eng.n_slots
+                        - sum(r is not None for r in eng.slot_req)
+                        - len(eng.queue))
+                if free <= 0:
+                    continue
+                eng.submit(q.popleft())
+                progressed = True
+                if budget is not None:
+                    budget -= 1
+        if self._rr:                    # rotate first pick across calls
+            self._rr.append(self._rr.pop(0))
+
+    # --------------------------------------------------------------- step
+    def step(self) -> int:
+        """One scheduling pass: fair-share admission, then one decode
+        step for every engine with work.  Returns sequences stepped."""
+        self._fair_admit()
+        total = 0
+        for eng in self.engines.values():
+            if eng.queue or any(r is not None for r in eng.slot_req):
+                total += eng.step()
+        return total
+
+    @property
+    def drained(self) -> bool:
+        return (all(not q for q in self.pending.values()) and
+                all(not e.queue and all(r is None for r in e.slot_req)
+                    for e in self.engines.values()))
+
+    def run_until_drained(self, max_steps: int = 10_000) -> None:
+        for _ in range(max_steps):
+            self.step()
+            if self.drained:
+                return
+        raise RuntimeError("tenant front did not drain")
