@@ -1,0 +1,168 @@
+"""Batched Remez exchange: fits/sec vs the serial host loop, and what the
+batching buys end-to-end in the table compiler.
+
+Part 1 — fits/sec.  The order-2 extended-FQA window mix (the wide-interval
+NAF grids the PLAC segmenter actually hands the fitter, sliced the way
+segment search slices them) is fitted two ways at batch widths W in
+{1, 2, 4, 8, 16, 32}: a serial ``fit_minimax`` loop, and one
+``fit_minimax_batch`` call.  Every (coeffs, b) pair must be bit-identical
+(asserted — batching is an execution knob, never a result knob), and the
+batched throughput must be >= 3x serial at W >= 8 (asserted).
+
+Part 2 — end-to-end.  Wall-clock per compiled table over the NAF-zoo smoke
+grid with the jax backend and speculation on, comparing the PR 6 prefetch
+policy (``PREFETCH_FRESH_REMEZ = True``: fresh speculative windows are
+Remez-solved in one batch during prefetch, so their candidate spaces can
+be hinted) against the prior policy (``False``: fresh windows skipped at
+hint time, solved serially on demand).  Compiled tables must be
+table_identity-equal (asserted) and the batched policy must not be slower
+(asserted).
+
+Emits ``BENCH_remez.json``.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, reset_rows, timeit, write_json
+from repro.compiler import CompilerSession, compile_table, table_identity
+from repro.compiler.compile import resolve_defaults
+from repro.compiler.memo import MemoizedSegmentEvaluator
+from repro.core import FWLConfig, PPAScheme, jax_backend_available
+from repro.core.fixed_point import grid_for_interval
+from repro.core.functions import get_naf
+from repro.core.remez import fit_minimax, fit_minimax_batch
+
+F, S = FWLConfig, PPAScheme
+
+#: the window mix: wide-interval NAF grids at w7, sliced the way segment
+#: search slices them (quarters, halves, an offset mid-window, the full
+#: grid) — 24 windows total, cycled to fill larger batch widths
+_MIX_NAFS = ("sigmoid_wide", "tanh_wide", "gelu_inner", "softplus")
+_W_IN = 7
+_DEGREE = 2             # order-2 extended-FQA
+_WIDTHS = (1, 2, 4, 8, 16, 32)
+
+
+def _window_mix():
+    windows = []
+    for name in _MIX_NAFS:
+        spec = get_naf(name)
+        xs, xe = spec.interval
+        xi = grid_for_interval(xs, xe, _W_IN)
+        x = xi.astype(np.float64) / (1 << _W_IN)
+        f = spec.fn(x)
+        G = x.size
+        for s, e in ((0, G // 4), (G // 4, G // 2), (G // 2, G),
+                     (0, G // 2), (G // 8, 5 * G // 8), (0, G)):
+            windows.append((x[s:e], f[s:e]))
+    return windows
+
+
+def _assert_bit_identical(serial, batched, what: str) -> None:
+    for i, ((cs, bs), (cb, bb)) in enumerate(zip(serial, batched)):
+        assert np.asarray(cs).tobytes() == np.asarray(cb).tobytes(), \
+            f"{what}: coeff bits diverged at window {i}"
+        assert float(bs) == float(bb) or (np.isnan(bs) and np.isnan(bb)), \
+            f"{what}: intercept diverged at window {i}"
+
+
+def fits_report() -> None:
+    mix = _window_mix()
+    for W in _WIDTHS:
+        windows = [mix[i % len(mix)] for i in range(W)]
+        serial = [fit_minimax(x, f, _DEGREE) for x, f in windows]
+        batched = fit_minimax_batch(windows, _DEGREE)
+        _assert_bit_identical(serial, batched, f"W={W}")
+
+        us_serial = timeit(
+            lambda: [fit_minimax(x, f, _DEGREE) for x, f in windows],
+            repeats=5, warmup=1)
+        us_batch = timeit(lambda: fit_minimax_batch(windows, _DEGREE),
+                          repeats=5, warmup=1)
+        ratio = us_serial / us_batch
+        emit(f"remez/fits/W{W}", us_batch,
+             serial_us=round(us_serial, 1),
+             fits_per_s=round(W / (us_batch * 1e-6)),
+             speedup=f"{ratio:.2f}x", bit_identical=True)
+        if W >= 8:
+            assert ratio >= 3.0, (
+                f"batched Remez only {ratio:.2f}x serial at W={W} "
+                f"(require >= 3x)")
+
+
+def e2e_report() -> None:
+    """Compiler wall-clock with speculation on: batched prefetch Remez
+    (PR 6) vs the on-demand serial policy it replaces."""
+    ok, why = jax_backend_available()
+    if not ok:
+        emit("remez/e2e/SKIPPED", 0.0, reason=why)
+        return
+    nafs = ("sigmoid", "tanh", "gelu_inner", "exp2_frac")
+    cfg = F(7, 7, (7,), (7,), 7)
+    sch = S(1, None, "fqa")
+    sess0 = CompilerSession()
+    tsegs = {}
+    for naf in nafs:
+        spec, interval, mae_t = resolve_defaults(naf, cfg, None, None)
+        tsegs[naf] = sess0.tseg_for(spec, interval, cfg, mae_t)
+
+    def compile_grid(batch_prefetch):
+        MemoizedSegmentEvaluator.PREFETCH_FRESH_REMEZ = batch_prefetch
+        try:
+            t0 = time.perf_counter()
+            sess = CompilerSession()
+            tabs = [compile_table(naf, cfg, sch, session=sess,
+                                  tseg=tsegs[naf], search_backend="jax",
+                                  speculate=3) for naf in nafs]
+            return time.perf_counter() - t0, tabs, sess.counters()
+        finally:
+            MemoizedSegmentEvaluator.PREFETCH_FRESH_REMEZ = True
+
+    # interleave the two policies and compare *best* walls: the compile
+    # is long enough (~1 s per round) that host frequency/load drift
+    # between two back-to-back blocks would otherwise dominate the
+    # ~5-10% effect being measured, and timing noise on this path is
+    # purely additive — the minimum is the faithful cost estimate
+    compile_grid(False), compile_grid(True)         # warm the jit caches
+    walls, tables, counters = {}, {}, {}
+    for _ in range(7):
+        w_on, tables["ondemand"], counters["ondemand"] = compile_grid(False)
+        w_ba, tables["batched"], counters["batched"] = compile_grid(True)
+        walls.setdefault("ondemand", []).append(w_on)
+        walls.setdefault("batched", []).append(w_ba)
+    for name in ("ondemand", "batched"):
+        c = counters[name]
+        emit(f"remez/e2e/{name}", min(walls[name]) / len(nafs) * 1e6,
+             tables=len(nafs), spec_windows=c["spec_windows"],
+             remez_batches=c["remez_batches"],
+             remez_batch_windows=c["remez_batch_windows"])
+
+    for a, b in zip(tables["ondemand"], tables["batched"]):
+        assert table_identity(a) == table_identity(b), \
+            "batched prefetch Remez changed a compiled table"
+    assert counters["batched"]["remez_batches"] > 0, \
+        "batched policy never batched (benchmark is vacuous)"
+    ratio = min(walls["batched"]) / min(walls["ondemand"])
+    emit("remez/e2e/wall_ratio", 0.0,
+         batched_over_ondemand=f"{ratio:.3f}",
+         rounds=",".join(f"{b_:.2f}/{o:.2f}" for b_, o in
+                         zip(walls["batched"], walls["ondemand"])),
+         reduced=bool(ratio < 1.0))
+    assert ratio < 1.0, (
+        f"batched prefetch Remez did not beat the on-demand serial "
+        f"policy (best-wall ratio {ratio:.3f})")
+
+
+def main() -> None:
+    reset_rows()
+    fits_report()
+    e2e_report()
+    write_json("BENCH_remez.json", benchmark="remez_batch")
+
+
+if __name__ == "__main__":
+    main()

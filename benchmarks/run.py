@@ -19,6 +19,7 @@ MODULES = [
     "benchmarks.table6_asic8",            # paper Table VI (cost model)
     "benchmarks.table7_asic16",           # paper Table VII (cost model)
     "benchmarks.tbw_speedup",             # paper Eq. 8-10
+    "benchmarks.remez_batch",             # batched exchange vs serial loop
     "benchmarks.search_throughput",
     "benchmarks.kernel_throughput",
     "benchmarks.roofline_table",          # §Roofline aggregate

@@ -35,6 +35,15 @@
 #                         coalesced engine must beat serial tokens/sec
 #                         at >= 4 concurrent clients and a warm tenant's
 #                         first token must land before a cold one's
+#   scripts/ci.sh tune-smoke
+#                         batched-Remez + autotuner tier: the remez parity
+#                         tests (batched exchange bit-identical to the
+#                         serial loop across the NAF zoo), then a tiny
+#                         autotune sweep against a throwaway store — the
+#                         persisted per-device config must round-trip, be
+#                         picked up by compile_or_load, and leave the
+#                         compiled artifact byte-identical to an untuned
+#                         compile
 #   scripts/ci.sh docs-check
 #                         every python snippet in docs/*.md parses and
 #                         its imports resolve; intra-repo doc links are
@@ -69,6 +78,12 @@ case "$mode" in
     python -m pytest -q tests/test_serve.py "$@" || exit 1
     exec python -m benchmarks.serve_load --smoke --out BENCH_serve.json
     ;;
+  tune-smoke)
+    python -m pytest -q tests/test_remez.py "$@" || exit 1
+    tunedir="$(mktemp -d)"
+    trap 'rm -rf "$tunedir"' EXIT
+    exec python -m repro.tune.autotune --store "$tunedir" --smoke --verify
+    ;;
   docs-check)
     exec python scripts/docs_check.py "$@"
     ;;
@@ -81,7 +96,7 @@ case "$mode" in
     ;;
   *)
     echo "usage: scripts/ci.sh" \
-         "[tier1|fast|bench-smoke|sweep-smoke|search-smoke|serve-smoke|docs-check]" \
+         "[tier1|fast|bench-smoke|sweep-smoke|search-smoke|serve-smoke|tune-smoke|docs-check]" \
          "[extra args...]" >&2
     exit 2
     ;;

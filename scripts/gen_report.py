@@ -7,7 +7,8 @@ import argparse
 import json
 from pathlib import Path
 
-ART = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+ROOT = Path(__file__).resolve().parents[1]
+ART = ROOT / "artifacts" / "dryrun"
 
 
 def fmt_bytes(b):
@@ -26,6 +27,32 @@ def load(variant="baseline"):
         pod = "multipod" if "multipod" in f.stem else "pod"
         recs[(r["arch"], r["shape"], pod)] = r
     return recs
+
+
+def bench_headlines():
+    """Headline rows from the BENCH_*.json emitted by ``benchmarks.run``:
+    the ratio/speedup summary lines each module asserts on (us == 0 rows
+    carry derived values only)."""
+    found = sorted(ROOT.glob("BENCH_*.json"))
+    if not found:
+        return
+    print("\n### Framework bench headlines\n")
+    print("| file | row | detail |")
+    print("|---|---|---|")
+    for f in found:
+        try:
+            rows = json.loads(f.read_text()).get("rows", [])
+        except (OSError, ValueError):
+            continue
+        for r in rows:
+            name = r.get("name", "")
+            keys = set(r) - {"name", "us_per_call"}
+            if not any(k in name for k in
+                       ("ratio", "speedup", "identity")) \
+                    and not keys & {"speedup", "reduced"}:
+                continue
+            detail = " ".join(f"{k}={r[k]}" for k in sorted(keys))
+            print(f"| {f.name} | {name} | {detail} |")
 
 
 def main():
@@ -80,6 +107,8 @@ def main():
                  "all-to-all", "collective-permute")]
         print(f"| {arch} | {shape} | " +
               " | ".join(f"{c:.2f}" for c in cols) + " |")
+
+    bench_headlines()
 
 
 if __name__ == "__main__":

@@ -52,6 +52,7 @@ from pathlib import Path
 
 from repro.compiler import (TableStore, merge_shards, paper_grid, run_live,
                             run_shard)
+from repro.compiler.compile import SPECULATE_ENV
 from repro.compiler.sweep import shard_jobs
 from repro.core.searchspace import (BACKEND_ENV, SEARCH_BACKENDS,
                                     jax_backend_available)
@@ -101,6 +102,10 @@ def build_parser() -> argparse.ArgumentParser:
                    help="take over claims staler than SEC (default: defer)")
     p.add_argument("--owner", default=None,
                    help="claim owner tag (default host:pid)")
+    p.add_argument("--retune", action="store_true",
+                   help="run the per-device autotuner (smoke shape) "
+                   "against --store before sweeping; the persisted winner "
+                   "then drives this and every later sweep on this device")
     p.add_argument("--merge-from", nargs="*", type=Path, default=None,
                    metavar="DIR", help="merge shard dirs into --store "
                    "instead of compiling")
@@ -123,24 +128,49 @@ def main(argv=None) -> int:
               f"{store.root}: {stats}")
         return 0
 
+    if args.retune:
+        from repro.tune import autotune
+        if not store.persist:
+            print("[sweep] --retune on a memory-only store: measuring "
+                  "without persisting", file=sys.stderr)
+        autotune(store.root if store.persist else None, smoke=True)
+
     jobs = paper_grid(args.preset, nafs=args.nafs, tables=args.tables)
     if args.limit is not None:
         jobs = jobs[:args.limit]
-    # the flag and $REPRO_SEARCH_BACKEND are documented as equivalent:
-    # degrade EITHER to numpy with a notice when jax x64 is missing,
-    # rather than erroring on every key of a live sweep
-    effective_backend = args.backend or os.environ.get(BACKEND_ENV)
+    # execution-knob precedence: CLI flag > env var > per-device tuned
+    # config > built-in defaults (docs/OPERATIONS.md "The autotuner").
+    # The tuned config also sets process-level floors / block shape.
+    tuned = None
+    if store.persist:
+        try:
+            from repro.tune import activate, resolve_tuned
+            tuned = resolve_tuned(store.root)
+            if tuned is not None:
+                activate(tuned)
+        except Exception:
+            tuned = None
+    stamp_backend = args.backend
+    if stamp_backend is None and not os.environ.get(BACKEND_ENV) and tuned:
+        stamp_backend = tuned.search_backend
+    stamp_spec = args.speculate
+    if stamp_spec is None and not os.environ.get(SPECULATE_ENV) and tuned:
+        stamp_spec = tuned.speculate
+    # the flag, $REPRO_SEARCH_BACKEND and the tuned config are documented
+    # as equivalent: degrade ANY of them to numpy with a notice when jax
+    # x64 is missing, rather than erroring on every key of a live sweep
+    effective_backend = stamp_backend or os.environ.get(BACKEND_ENV)
     if effective_backend == "jax":
         ok, why = jax_backend_available()
         if not ok:
             print(f"[sweep] jax search backend unavailable on this host "
                   f"({why}); falling back to numpy", file=sys.stderr)
-            args.backend = "numpy"
-    if args.backend is not None or args.speculate is not None:
+            stamp_backend = "numpy"
+    if stamp_backend is not None or stamp_spec is not None:
         # execution knobs only — job.key() ignores them, so the shard
         # partition and the store rendezvous are unchanged
-        jobs = [dataclasses.replace(j, search_backend=args.backend,
-                                    speculate=args.speculate) for j in jobs]
+        jobs = [dataclasses.replace(j, search_backend=stamp_backend,
+                                    speculate=stamp_spec) for j in jobs]
     if args.list:
         # live mode has no partition: list the whole grid
         mine = (shard_jobs(jobs, args.hosts, args.host_id)
@@ -159,6 +189,8 @@ def main(argv=None) -> int:
                          "state": state})
         if args.as_json:
             print(json.dumps({"mode": args.mode, "store": str(store.root),
+                              "tuned": (dataclasses.asdict(tuned)
+                                        if tuned else None),
                               "jobs": rows}))
         else:
             for r in rows:
@@ -168,6 +200,8 @@ def main(argv=None) -> int:
                      if args.mode == "sharded" else "live grid")
             print(f"[sweep] {scope}: {len(mine)} of {len(jobs)} unique "
                   f"jobs on {store.root}")
+            print(f"[sweep] tuned config: "
+                  f"{tuned.summary() if tuned else 'none for this device'}")
         return 0
 
     if args.mode == "live":

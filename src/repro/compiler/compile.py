@@ -65,7 +65,15 @@ def resolve_defaults(naf: "str | NAFSpec",
     return spec, interval, float(mae_t)
 
 _COUNTER_KEYS = ("calls", "hits", "misses", "pruned", "warm_hits",
-                 "spec_windows", "cand_evals", "points_touched")
+                 "spec_windows", "cand_evals", "points_touched",
+                 "cross_warm_hits", "remez_batches", "remez_batch_windows")
+
+
+def _naf_family(name: str) -> str:
+    """Related-NAF grouping for cross-NAF warm seeding: a ``_wide``
+    variant shares its base function with the narrow NAF, so satisfying
+    coefficient sets transfer (after grid-value translation)."""
+    return name[:-5] if name.endswith("_wide") else name
 
 #: ``PPATable.stats`` keys that record search *effort*, not the compiled
 #: artifact: they move with the search backend's dispatch pattern, the memo
@@ -100,6 +108,9 @@ class CompilerSession:
         self.memoize = memoize
         self._evaluators: Dict[tuple, MemoizedSegmentEvaluator] = {}
         self._tseg: Dict[tuple, int] = {}
+        #: warm candidates copied between related-NAF evaluators (the
+        #: matching hit counter lives on each evaluator: cross_warm_hits)
+        self.cross_warm_seeds = 0
 
     def evaluator(self, spec: NAFSpec, interval: Tuple[float, float],
                   cfg: FWLConfig, quantizer_key: tuple,
@@ -112,10 +123,32 @@ class CompilerSession:
             f_vals = spec(x_int.astype(np.float64) / (1 << cfg.w_in))
             ev = MemoizedSegmentEvaluator(x_int, f_vals, cfg, make_q(),
                                           mae_t, enabled=self.memoize)
+            if self.memoize:
+                self._cross_seed(key, ev)
             self._evaluators[key] = ev
         else:
             ev.retarget(mae_t)
         return ev
+
+    def _cross_seed(self, key: tuple,
+                    ev: MemoizedSegmentEvaluator) -> None:
+        """Seed a fresh evaluator's warm candidates from *related* NAF
+        contexts already in the session — same NAF family (sigmoid ↔
+        sigmoid_wide, or the same NAF on a specialized interval), same
+        FWL cfg, same quantizer context.  Starts are matched by grid
+        value, and a seeded candidate is still verified inside the new
+        window's own candidate space, so verdicts (and artifacts) are
+        unchanged — only scans that would succeed anyway get cheaper."""
+        name, _, cfg, quantizer_key = key
+        fam = _naf_family(name)
+        for (dname, _, dcfg, dqkey), donor in self._evaluators.items():
+            if dcfg != cfg or dqkey != quantizer_key:
+                continue
+            if _naf_family(dname) != fam:
+                continue
+            if not donor._warm:
+                continue
+            self.cross_warm_seeds += ev.seed_warm(donor.x_int, donor._warm)
 
     def tseg_for(self, spec: NAFSpec, interval: Tuple[float, float],
                  cfg: FWLConfig, mae_t: float) -> int:
@@ -135,6 +168,7 @@ class CompilerSession:
         for ev in self._evaluators.values():
             for k in _COUNTER_KEYS:
                 agg[k] += int(getattr(ev, k))
+        agg["cross_warm_seeds"] = int(self.cross_warm_seeds)
         return agg
 
 

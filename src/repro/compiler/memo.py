@@ -68,6 +68,7 @@ import numpy as np
 from repro.core.datapath import FWLConfig
 from repro.core.fixed_point import round_half_away
 from repro.core.quantize import Quantizer, SegmentFit, _EPS
+from repro.core.remez import fit_minimax_batch
 from repro.core.segmentation import SegmentEvaluator
 
 __all__ = ["MemoizedSegmentEvaluator"]
@@ -96,15 +97,26 @@ class MemoizedSegmentEvaluator(SegmentEvaluator):
         self.pruned = 0
         self.warm_hits = 0
         self.spec_windows = 0   # windows fitted by speculative prefetch
+        self.cross_warm_hits = 0  # warm hits on cross-NAF seeded candidates
+        self.remez_batches = 0  # prefetch phase-0 batched exchange calls
+        self.remez_batch_windows = 0  # fresh windows solved by those calls
         self._cache: Dict[Tuple[int, int], _Entry] = {}
         # per-start frontier of complete fits: (ends sorted asc, running-max
         # achievable MAE per end) — the containment lower bound.
         self._frontier: Dict[int, Tuple[List[int], List[float]]] = {}
         self._warm: Dict[int, Tuple[int, ...]] = {}
-        # per-window Remez coefficients: a window scanned once (hint,
-        # probe, finalize, any MAE_t) never re-solves the exchange — the
-        # candidate space it regenerates is identical by construction.
-        self._areal: Dict[Tuple[int, int], np.ndarray] = {}
+        self._cross_seeded: set = set()  # starts whose warm came from a peer
+        # per-window Remez fit (coeffs, intercept): a window scanned once
+        # (hint, probe, finalize, any MAE_t) never re-solves the exchange —
+        # the candidate space it regenerates is identical by construction.
+        self._areal: Dict[Tuple[int, int],
+                          Tuple[np.ndarray, Optional[float]]] = {}
+        # windows whose _areal came from a phase-0 speculative batch solve
+        # and that no real scan has touched yet — excluded from phase-2
+        # hints (the PR 5 hint budget measured cheapest; the batch solve's
+        # value is that the window's eventual *lead* scan skips the serial
+        # exchange, not that it buys more speculation)
+        self._phase0_only: set = set()
         f_q = round_half_away(self.f_vals * (1 << cfg.w_out)) \
             / (1 << cfg.w_out)
         self._qerr = np.abs(self.f_vals - f_q)
@@ -114,6 +126,36 @@ class MemoizedSegmentEvaluator(SegmentEvaluator):
         """Change MAE_t without dropping cached fits (they are MAE_t-free
         facts about windows; only the ``ok`` verdict moves)."""
         self.mae_t = float(mae_t)
+
+    # -- cross-NAF warm seeding ------------------------------------------------
+    def seed_warm(self, donor_x_int: np.ndarray,
+                  donor_warm: Dict[int, Tuple[int, ...]]) -> int:
+        """Seed this evaluator's warm candidates from a *related* NAF's.
+
+        ``donor_warm`` maps the donor's segment-start grid indices to its
+        last satisfying coefficient sets; starts are translated by grid
+        *value* (the intervals may differ — sigmoid vs sigmoid_wide), and
+        only starts with no warm candidate of their own are seeded.  Safe
+        by the same argument as ordinary warm starts: a seeded candidate
+        is verified inside this window's own candidate space and can only
+        short-circuit a scan that would have succeeded anyway — verdicts,
+        and therefore segments, are unchanged.  Returns the number of
+        starts seeded; hits are counted in ``cross_warm_hits``.
+        """
+        seeded = 0
+        for ds, cand in donor_warm.items():
+            if ds >= donor_x_int.size:
+                continue
+            x_val = donor_x_int[ds]
+            pos = int(np.searchsorted(self.x_int, x_val))
+            if pos >= self.x_int.size or self.x_int[pos] != x_val:
+                continue
+            if pos in self._warm:
+                continue
+            self._warm[pos] = cand
+            self._cross_seeded.add(pos)
+            seeded += 1
+        return seeded
 
     # -- cache bookkeeping -----------------------------------------------------
     def _at_target(self, fit: SegmentFit) -> SegmentFit:
@@ -182,10 +224,11 @@ class MemoizedSegmentEvaluator(SegmentEvaluator):
 
         key = (start, end)
         warm = self._warm.get(start) if mode == "feasible" else None
+        a_real, b_real = self._areal.get(key, (None, None))
         fit = self.quantizer.fit_segment(
             self.x_int[start: end + 1], self.f_vals[start: end + 1],
             self.cfg, self.mae_t, mode=mode, a_warm=warm,
-            a_real=self._areal.get(key))
+            a_real=a_real, b_real=b_real)
         self._record(start, end, fit, mode)
         return fit
 
@@ -198,11 +241,16 @@ class MemoizedSegmentEvaluator(SegmentEvaluator):
         self.points_touched += end - start + 1
         self.cand_evals += fit.evals
         if fit.a_real is not None:
-            self._areal.setdefault((start, end), fit.a_real)
+            self._areal.setdefault((start, end), (fit.a_real, fit.b_real))
+        self._phase0_only.discard((start, end))
         if fit.warm_hit:
             self.warm_hits += 1
+            if start in self._cross_seeded:
+                self.cross_warm_hits += 1
         if fit.ok:
             self._warm[start] = fit.a_int
+            if not fit.warm_hit:
+                self._cross_seeded.discard(start)
         # a feasible-mode scan that found nothing is exhaustive -> complete
         complete = mode != "feasible" or not fit.ok
         ent = self._cache.get((start, end))
@@ -223,6 +271,21 @@ class MemoizedSegmentEvaluator(SegmentEvaluator):
     #: the first chunk and still turn into cache hits.
     SPEC_CHUNK_BUDGET = 1
 
+    #: pre-solve the Remez exchange for every fresh window in a
+    #: speculative plan as ONE ``fit_minimax_batch`` call (phase 0 below).
+    #: Successor windows routinely become the leads of later probes, so
+    #: by the time a window is actually scanned its exchange is already
+    #: solved at the amortized batch rate instead of the ~0.65 ms serial
+    #: rate.  ``False`` restores the prior on-demand policy (each lead
+    #: pays a serial solve inside its scan); benchmarks flip this to
+    #: measure the win.  Either way results are bit-identical: the
+    #: batched exchange is bit-exact with the serial one.
+    PREFETCH_FRESH_REMEZ = True
+
+    #: max fresh windows per phase-0 batch (lead + the most likely
+    #: successors); deeper plan entries are left for their own prefetch.
+    PREFETCH_REMEZ_BATCH = 4
+
     def prefetch(self, windows: List[Tuple[int, int]],
                  mode: str = "feasible") -> None:
         """Fit every still-unanswered window in ONE batched dispatch.
@@ -242,6 +305,42 @@ class MemoizedSegmentEvaluator(SegmentEvaluator):
         """
         if not self.enabled or not windows:
             return
+        # phase 0 — batch the Remez exchange for every announced window
+        # that still needs both a fit and its pre-quantization
+        # coefficients.  The per-iteration numpy dispatch overhead
+        # amortizes across the stacked windows, so each solve costs a
+        # fraction of the serial exchange — and since speculative
+        # successors routinely become the leads of later probes, this is
+        # where the compiler's last serial host loop actually drains:
+        # phase 1 (and plain ``evaluate`` misses) find ``_areal`` already
+        # populated and skip ``fit_minimax`` entirely.
+        if self.PREFETCH_FRESH_REMEZ:
+            fresh: List[Tuple[int, int]] = []
+            seen: set = set()
+            for s, e in windows:
+                if (s, e) in seen:
+                    continue
+                seen.add((s, e))
+                if (s, e) in self._areal or not self._needs_fit(s, e, mode):
+                    continue
+                fresh.append((s, e))
+            # plan order is likelihood order: the lead first, then ever-
+            # deeper speculative successors.  Deep successors rarely turn
+            # into leads, so solving them is mostly waste — cap the batch
+            # at the depths that pay for themselves.
+            fresh = fresh[: self.PREFETCH_REMEZ_BATCH]
+            if len(fresh) >= 2:     # a single window batches with itself
+                scale = float(1 << self.cfg.w_in)
+                fits = fit_minimax_batch(
+                    [(self.x_int[s: e + 1].astype(np.float64) / scale,
+                      self.f_vals[s: e + 1]) for s, e in fresh],
+                    degree=self.cfg.order)
+                for (s, e), (coeffs, b) in zip(fresh, fits):
+                    self._areal[(s, e)] = (
+                        np.asarray(coeffs, dtype=np.float64), float(b))
+                    self._phase0_only.add((s, e))
+                self.remez_batches += 1
+                self.remez_batch_windows += len(fresh)
         # phase 1 — the leading window is the probe the sequential flow
         # evaluates next, so it scans in full through the solo path (warm
         # short-circuit + fused lookahead dispatches) and is recorded as
@@ -250,25 +349,26 @@ class MemoizedSegmentEvaluator(SegmentEvaluator):
         if self._needs_fit(start, end, mode):
             self.spec_windows += 1
             warm = self._warm.get(start) if mode == "feasible" else None
+            a_real, b_real = self._areal.get((start, end), (None, None))
             fit = self.quantizer.fit_segment(
                 self.x_int[start: end + 1], self.f_vals[start: end + 1],
                 self.cfg, self.mae_t, mode=mode, a_warm=warm,
-                a_real=self._areal.get((start, end)))
+                a_real=a_real, b_real=b_real)
             self._record(start, end, fit, mode)
         # phase 2 — successor windows, re-filtered now that the primary's
         # outcome is known (a failed primary's frontier entry prunes the
-        # grow branch for free).  Only windows whose Remez fit is already
-        # cached are hinted: a mispredicted *fresh* window would pay an
-        # exchange solve — the one per-window cost batching cannot fuse —
-        # for a 50/50 branch, which measures as a net loss on CPU-class
-        # dispatch latencies.  Re-probes (MAE_t retargets, finalize
-        # overlaps) are exactly the free-to-hint population.
+        # grow branch for free).  Only windows a *real scan* has touched
+        # before are hinted; a phase-0 batch solve alone does not qualify
+        # (measured: hinting every fresh window triples the speculative
+        # chunk dispatches and costs more than the batched exchange
+        # saves — the phase-0 value is cashed in at the window's own lead
+        # scan, not here).
         todo: List[Tuple[int, int]] = []
         warms: List[Optional[Tuple[int, ...]]] = []
         for s, e in windows[1:]:
             if (s, e) in todo or (s, e) == (start, end):
                 continue
-            if (s, e) not in self._areal:
+            if (s, e) not in self._areal or (s, e) in self._phase0_only:
                 continue
             ent = self._cache.get((s, e))
             if ent is not None and ent.fit.truncated:
@@ -284,7 +384,8 @@ class MemoizedSegmentEvaluator(SegmentEvaluator):
             [(self.x_int[s: e + 1], self.f_vals[s: e + 1]) for s, e in todo],
             self.cfg, self.mae_t, mode=mode, warms=warms,
             max_chunks=[self.SPEC_CHUNK_BUDGET] * len(todo),
-            a_reals=[self._areal[w] for w in todo])
+            a_reals=[self._areal[w][0] for w in todo],
+            b_reals=[self._areal[w][1] for w in todo])
         for (s, e), fit in zip(todo, fits):
             if fit.truncated:
                 self._record_hint(s, e, fit)
@@ -304,7 +405,8 @@ class MemoizedSegmentEvaluator(SegmentEvaluator):
         self.points_touched += end - start + 1
         self.cand_evals += fit.evals
         if fit.a_real is not None:
-            self._areal.setdefault((start, end), fit.a_real)
+            self._areal.setdefault((start, end), (fit.a_real, fit.b_real))
+        self._phase0_only.discard((start, end))
         ent = self._cache.get((start, end))
         if ent is None or (not ent.complete and fit.mae < ent.fit.mae):
             self._cache[(start, end)] = _Entry(fit, False)

@@ -27,8 +27,10 @@ from typing import ClassVar, Dict, List, Optional, Tuple
 
 from repro.core.datapath import FWLConfig
 from repro.core.schemes import PPAScheme, PPATable
+from repro.core.searchspace import BACKEND_ENV, jax_backend_available
 
-from .compile import CompilerSession, compile_table, resolve_defaults
+from .compile import (SPECULATE_ENV, CompilerSession, compile_table,
+                      resolve_defaults)
 
 __all__ = ["CompileJob", "TableStore", "cache_dir", "default_store",
            "set_default_store", "compile_or_load"]
@@ -148,6 +150,7 @@ class TableStore:
         self.misses = 0
         self.evictions = 0
         self.compiles = 0       # actual compiler runs charged to this store
+        self.tuned_applied = 0  # compiles that picked up a tuned config
 
     @property
     def root(self) -> Path:
@@ -284,9 +287,43 @@ class TableStore:
             return tab
         self.misses += 1
         self.compiles += 1
-        tab = job.compile(session)
+        tab = self._apply_tuned(job).compile(session)
         self._put(job, key, tab)
         return tab
+
+    def _apply_tuned(self, job: CompileJob) -> CompileJob:
+        """Fill the job's *execution* knobs from the tuned config
+        persisted next to this store (``<root>/tune/``), when one exists
+        for this device.  Only fields the caller left None are filled,
+        and the operator env vars still win over the tuned file (see
+        :mod:`repro.tune.config` for the precedence order).  The key was
+        computed before this call and excludes these fields, so tuning
+        can never move an artifact's address — and the compiled bytes
+        are asserted identical by the tune-smoke CI tier."""
+        if not self.persist:
+            return job
+        try:
+            from repro.tune import activate, resolve_tuned
+            tuned = resolve_tuned(self.root)
+        except Exception:
+            return job
+        if tuned is None:
+            return job
+        activate(tuned)     # floors + default block (idempotent)
+        updates: Dict[str, object] = {}
+        if job.search_backend is None \
+                and not os.environ.get(BACKEND_ENV):
+            backend = tuned.search_backend
+            if backend == "jax" and not jax_backend_available()[0]:
+                backend = None      # stale config from a jax-capable host
+            if backend:
+                updates["search_backend"] = backend
+        if job.speculate is None and not os.environ.get(SPECULATE_ENV):
+            updates["speculate"] = int(tuned.speculate)
+        if not updates:
+            return job
+        self.tuned_applied += 1
+        return dataclasses.replace(job, **updates)
 
     # -- claim-file leasing ----------------------------------------------------
     # Hosts racing on one key (a shared store directory, or a takeover of a

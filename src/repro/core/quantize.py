@@ -28,7 +28,7 @@ import numpy as np
 
 from .datapath import FWLConfig
 from .fixed_point import hamming_weight, round_half_away
-from .remez import fit_minimax
+from .remez import fit_minimax, fit_minimax_batch
 from .searchspace import SearchBackend, SegmentContext, resolve_backend
 
 __all__ = [
@@ -70,6 +70,11 @@ class SegmentFit:
     #: probe -> best-mode finalize, MAE retargeting) skips the exchange
     #: solve and provably regenerates the identical candidate space.
     a_real: Optional[np.ndarray] = None
+    #: the matching Remez intercept, cached for the same reason: non-
+    #: flattening quantizers (PLAC) fix b from it, so a re-scan must not
+    #: pay (or drift from) a second exchange solve.  ``None`` when the
+    #: scan was seeded with ``a_real`` and never ran Remez itself.
+    b_real: Optional[float] = None
 
 
 class _SegmentScan:
@@ -96,6 +101,7 @@ class _SegmentScan:
         self.chunks_issued = 0
         self.truncated = False
         self.a_real: Optional[np.ndarray] = None   # set by _start_scan
+        self.b_real: Optional[float] = None        # set by _start_scan
         n = ctx.cfg.order
         self.best = SegmentFit(False, np.inf, tuple(0 for _ in range(n)), 0)
         self.done = any(c.size == 0 for c in cands)  # empty candidate space
@@ -196,6 +202,7 @@ class _SegmentScan:
     def result(self) -> SegmentFit:
         fit = self.best
         fit.a_real = self.a_real
+        fit.b_real = self.b_real
         if fit.warm_hit:
             return fit
         fit.n_satisfying = self.n_sat
@@ -231,6 +238,10 @@ class Quantizer:
         self.chunk = chunk
         self.store_cap = store_cap
         self.search = resolve_backend(backend)
+        #: effort counters: windows whose Remez exchange ran through one
+        #: batched :func:`fit_minimax_batch` call in :meth:`fit_segments`
+        self.remez_batch_calls = 0
+        self.remez_batch_windows = 0
         #: feasible-scan speculative depth: fuse the warm probe and up to
         #: ``1 + lookahead`` chunks into one dispatch, consuming in order
         #: and discarding everything past the early exit — results and
@@ -245,10 +256,10 @@ class Quantizer:
 
     # -- shared evaluation ----------------------------------------------------
     def _start_scan(self, x_int, f_vals, cfg, mae_t, mode, a_real, a_warm,
-                    max_chunks: Optional[int] = None
+                    max_chunks: Optional[int] = None,
+                    b_real: Optional[float] = None
                     ) -> Tuple[_SegmentScan, SegmentContext]:
         n = cfg.order
-        b_real = None
         if a_real is None:
             x_f = x_int.astype(np.float64) / (1 << cfg.w_in)
             coeffs, b_real = fit_minimax(x_f, f_vals, degree=n)
@@ -265,6 +276,7 @@ class Quantizer:
         scan = _SegmentScan(self, ctx, cands, mae_t, mode, a_warm,
                             max_chunks=max_chunks)
         scan.a_real = np.asarray(a_real, dtype=np.float64)
+        scan.b_real = b_real
         return scan, ctx
 
     def fit_segment(
@@ -276,6 +288,7 @@ class Quantizer:
         mode: str = "feasible",
         a_real: Optional[np.ndarray] = None,
         a_warm: Optional[Tuple[int, ...]] = None,
+        b_real: Optional[float] = None,
     ) -> SegmentFit:
         """Quantize one segment.
 
@@ -292,9 +305,11 @@ class Quantizer:
             mae_t it is returned after a single evaluation; otherwise the
             normal scan runs.  Feasibility decisions are unchanged either
             way — a warm hit just proves existence with one eval.
+          b_real: the Remez intercept paired with ``a_real`` (used by
+            non-flattening quantizers; ignored when ``a_real`` is None).
         """
         scan, ctx = self._start_scan(x_int, f_vals, cfg, mae_t, mode,
-                                     a_real, a_warm)
+                                     a_real, a_warm, b_real=b_real)
         if mode == "feasible" and self.lookahead > 0:
             # speculative lookahead: fetch the warm probe plus the next
             # chunks together, dispatch them fused, and stop consuming at
@@ -349,6 +364,7 @@ class Quantizer:
         warms: Optional[Sequence[Optional[Tuple[int, ...]]]] = None,
         max_chunks: Optional[Sequence[Optional[int]]] = None,
         a_reals: Optional[Sequence[Optional[np.ndarray]]] = None,
+        b_reals: Optional[Sequence[Optional[float]]] = None,
     ) -> List[SegmentFit]:
         """Fit several windows in lockstep, dispatching each round's
         candidate blocks as ONE multi-window backend call.
@@ -360,6 +376,12 @@ class Quantizer:
         behind TBW speculative probe batching
         (:meth:`repro.compiler.memo.MemoizedSegmentEvaluator.prefetch`).
 
+        Windows arriving without pre-quantization coefficients (``a_reals``
+        entry None) get them from ONE :func:`fit_minimax_batch` call — the
+        batched exchange is bit-identical to the serial solve the solo path
+        runs, so the candidate spaces (and fits) are unchanged; only the
+        host time per fresh window drops.
+
         ``max_chunks`` optionally budgets each window's scan (None =
         unbounded): a budgeted window stops after that many candidate
         chunks (warm probes are free) and, if it neither satisfied MAE_t
@@ -369,11 +391,25 @@ class Quantizer:
         warms = warms if warms is not None else [None] * len(windows)
         budgets = (max_chunks if max_chunks is not None
                    else [None] * len(windows))
-        reals = a_reals if a_reals is not None else [None] * len(windows)
+        reals = list(a_reals) if a_reals is not None \
+            else [None] * len(windows)
+        breals = list(b_reals) if b_reals is not None \
+            else [None] * len(windows)
+        fresh = [i for i, r in enumerate(reals) if r is None]
+        if fresh:
+            fits = fit_minimax_batch(
+                [(windows[i][0].astype(np.float64) / (1 << cfg.w_in),
+                  windows[i][1]) for i in fresh],
+                degree=cfg.order)
+            for i, (coeffs, b) in zip(fresh, fits):
+                reals[i] = np.asarray(coeffs, dtype=np.float64)
+                breals[i] = b
+            self.remez_batch_calls += 1
+            self.remez_batch_windows += len(fresh)
         scans = [self._start_scan(x, f, cfg, mae_t, mode, real, warm,
-                                  max_chunks=budget)
-                 for (x, f), warm, budget, real
-                 in zip(windows, warms, budgets, reals)]
+                                  max_chunks=budget, b_real=breal)
+                 for (x, f), warm, budget, real, breal
+                 in zip(windows, warms, budgets, reals, breals)]
         while True:
             live = []
             for scan, ctx in scans:

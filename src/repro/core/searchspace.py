@@ -280,15 +280,29 @@ class JaxSearchBackend(SearchBackend):
     name = "jax"
 
     #: padding floors: blocks smaller than these are padded up — one trace
-    #: serves every probe-sized dispatch (warm starts are K=1).
+    #: serves every probe-sized dispatch (warm starts are K=1).  These
+    #: class attributes are the process defaults; the autotuner
+    #: (:mod:`repro.tune`) overwrites them with the persisted per-device
+    #: winners, and individual instances can override via the constructor
+    #: (used by the autotuner's own measurement sweeps).  Pure execution
+    #: knobs: padded lanes are sliced off before anyone reads them, so
+    #: results are floor-independent.
     K_FLOOR = 64
     G_FLOOR = 32
 
-    def __init__(self):
+    def __init__(self, *, k_floor: Optional[int] = None,
+                 g_floor: Optional[int] = None,
+                 batch_elems: Optional[int] = None):
         ok, why = jax_backend_available()
         if not ok:
             raise RuntimeError(f"jax search backend unavailable ({why}); "
                                f"use backend='numpy'")
+        if k_floor is not None:
+            self.K_FLOOR = int(k_floor)
+        if g_floor is not None:
+            self.G_FLOOR = int(g_floor)
+        if batch_elems is not None:
+            self.BATCH_ELEMS = int(batch_elems)
 
     # -- device staging --------------------------------------------------------
     def _grid(self, ctx: SegmentContext, gp: int):

@@ -32,7 +32,7 @@ from jax.experimental import pallas as pl
 from repro.core.datapath import DatapathPlan
 
 from .body import ppa_eval_block
-from .ppa import DEFAULT_BLOCK, pad_to_tiles
+from .ppa import DEFAULT_BLOCK, default_block, pad_to_tiles
 
 __all__ = ["ppa_fused_2d", "ppa_fused_apply", "fused_kernel_statics"]
 
@@ -128,10 +128,17 @@ def ppa_fused_2d(
 
 
 def ppa_fused_apply(tc, xf: jax.Array, *, gate: bool = False,
-                    block: Tuple[int, int] = DEFAULT_BLOCK,
+                    block: "Tuple[int, int] | None" = None,
                     interpret: bool = True) -> jax.Array:
     """Any-shape adapter: flatten + pad to the tile grid, run the fused
-    kernel, unpad.  float32 in, float32 out."""
+    kernel, unpad.  float32 in, float32 out.
+
+    ``block=None`` resolves the process default (autotuner-overridable,
+    :func:`repro.kernels.ppa.default_block`); outputs are block-shape
+    independent either way.
+    """
+    if block is None:
+        block = default_block()
     shape = xf.shape
     flat = xf.reshape(-1)
     n = flat.shape[0]

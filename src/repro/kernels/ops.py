@@ -58,7 +58,7 @@ from repro.core.functions import get_naf
 from repro.core.schemes import PPATable
 
 from .fused import ppa_fused_apply
-from .ppa import pad_to_tiles, ppa_eval_2d
+from .ppa import default_block, pad_to_tiles, ppa_eval_2d
 from .ref import horner_int, ppa_eval_ref
 
 __all__ = ["TableConsts", "pack_table", "ppa_apply", "ppa_gate", "ppa_act",
@@ -210,7 +210,8 @@ def _eval_pallas(tc: TableConsts, x_int: jax.Array, *,
     shape = x_int.shape
     flat = x_int.reshape(-1)
     n = flat.shape[0]
-    x2, blk = pad_to_tiles(flat, 256, 128)
+    bm, bn = default_block()
+    x2, blk = pad_to_tiles(flat, bm, bn)
     out = ppa_eval_2d(x2, tc.starts, tc.coefs, tc.plan, block=blk,
                       interpret=interpret)
     return out.reshape(-1)[:n].reshape(shape)

@@ -15,7 +15,7 @@ The (S, n+1) int32 coefficient ROM rides in VMEM next to the block
 from __future__ import annotations
 
 import functools
-from typing import TYPE_CHECKING, Tuple, Union
+from typing import TYPE_CHECKING, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -30,6 +30,38 @@ if TYPE_CHECKING:  # avoid a module-level kernels -> core.schemes import edge
     from repro.core.schemes import PPATable
 
 DEFAULT_BLOCK = (256, 128)
+
+#: process-wide active block shape, overridable by the per-device
+#: autotuner (:mod:`repro.tune`).  Callers that pass ``block=None`` (the
+#: backend-registry paths in :mod:`repro.kernels.ops` and the fused
+#: kernels) resolve through :func:`default_block`; an explicit ``block``
+#: argument always wins.  Must be set *before* the first trace of a jitted
+#: caller — block shape is a trace-time static.
+_active_block: Tuple[int, int] = DEFAULT_BLOCK
+
+
+def default_block() -> Tuple[int, int]:
+    """The block shape used when a caller does not pick one explicitly."""
+    return _active_block
+
+
+def set_default_block(block: Optional[Tuple[int, int]]) -> Tuple[int, int]:
+    """Override the process default block shape (None resets).
+
+    A pure execution knob: padding/slicing keeps kernel outputs
+    block-shape-independent (asserted by the kernel parity suite), so the
+    autotuner may apply a tuned shape without touching any artifact.
+    """
+    global _active_block
+    if block is None:
+        _active_block = DEFAULT_BLOCK
+    else:
+        bm, bn = int(block[0]), int(block[1])
+        if bm <= 0 or bn <= 0 or bn % 128:
+            raise ValueError(f"invalid block {block!r}: want (m>0, n%128==0)")
+        _active_block = (bm, bn)
+    return _active_block
+
 
 PlanLike = Union[DatapathPlan, FWLConfig]
 

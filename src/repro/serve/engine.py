@@ -102,6 +102,13 @@ class ServeEngine:
         # a bundle built from it — the store is part of the bundle cache
         # key, so engines with different stores never share tables.
         self.table_store = table_store
+        # pick up the per-device tuned config persisted next to the store
+        # (fused block shape, jax search floors) BEFORE anything traces a
+        # kernel — block shape is a trace-time static.  Zero flags: if no
+        # config exists for this device, defaults stand.
+        from repro.tune import activate_for_store
+        self.tuned = activate_for_store(table_store) \
+            if table_store is not None else None
         self.acts = make_model_acts(cfg, table_store)
         self.ctx = ctx or ShardCtx()
         self.n_slots = n_slots

@@ -1,0 +1,29 @@
+"""Per-device autotuning: persisted execution configs for the compiler
+and kernels.
+
+The repo's execution knobs — search-backend choice and its padding floors
+(``K_FLOOR``/``G_FLOOR``/``BATCH_ELEMS``), TBW speculation depth, and the
+``pallas_fused`` block shape — change how fast a table compiles or an
+activation evaluates, never what they produce (bit-identity is asserted
+across all of them by the test/benchmark suites).  That makes them safe to
+tune per machine and apply silently.
+
+:mod:`repro.tune.config` defines the :class:`TunedConfig` record, its
+device-keyed persistence next to a ``TableStore`` (``<root>/tune/``), and
+:func:`activate` — the one place tuned values are applied to process
+defaults.  :mod:`repro.tune.autotune` measures the candidates and writes
+the winner.  ``TableStore.compile_or_load``, ``scripts/sweep.py`` and
+``ServeEngine`` all resolve the active config automatically; set
+``REPRO_TUNE=0`` to ignore persisted configs entirely.
+"""
+
+from .autotune import autotune
+from .config import (TUNE_DIR, TUNE_ENV, TunedConfig, activate,
+                     activate_for_store, active_config, device_key,
+                     load_tuned, resolve_tuned, save_tuned, tuned_path)
+
+__all__ = [
+    "TUNE_DIR", "TUNE_ENV", "TunedConfig", "activate", "activate_for_store",
+    "active_config", "autotune", "device_key", "load_tuned", "resolve_tuned",
+    "save_tuned", "tuned_path",
+]

@@ -1,0 +1,196 @@
+"""Batched Remez exchange bit-parity (PR 7).
+
+``fit_minimax_batch`` is an execution knob: W windows solved in one
+stacked exchange must return exactly the bits W serial ``fit_minimax``
+calls return, because FQA candidate spaces are centered on
+``floor(a_real * 2**w_a)`` — a 1-ulp drift moves candidate grids and
+therefore artifacts.  These tests pin that contract across the NAF zoo,
+orders 1/2, degenerate grids (G <= ncoef, down to empty), random window
+partitions (hypothesis, when installed), and the vectorized
+``_pick_extrema`` against a reimplementation of the original per-point
+loop.  Plus the ``horner`` degree-0 regression: ``coeffs[0]`` used to be
+indexed before the empty-coeffs guard could fire.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import NAF_REGISTRY, grid_for_interval
+from repro.core.functions import get_naf
+from repro.core.remez import (_pick_extrema, fit_minimax,
+                              fit_minimax_batch, horner)
+
+W_IN = 7
+ZOO = sorted(NAF_REGISTRY)
+
+
+def _grid(naf):
+    spec = get_naf(naf)
+    xi = grid_for_interval(*spec.interval, W_IN)
+    x = xi.astype(np.float64) / (1 << W_IN)
+    return x, spec.fn(x)
+
+
+def _slices(G):
+    """The window shapes segment search produces: quarters, halves, an
+    offset mid-window, the full grid, and degenerate tails."""
+    return [(0, G // 4), (G // 4, G // 2), (G // 2, G), (0, G // 2),
+            (G // 8, 5 * G // 8), (0, G),
+            (0, 0), (0, 1), (0, 2), (0, 3), (G - 2, G)]
+
+
+def assert_bit_identical(serial, batched):
+    assert len(serial) == len(batched)
+    for i, ((cs, bs), (cb, bb)) in enumerate(zip(serial, batched)):
+        cs, cb = np.asarray(cs, dtype=np.float64), np.asarray(cb, np.float64)
+        assert cs.shape == cb.shape, f"window {i}: coeff shape"
+        assert cs.tobytes() == cb.tobytes(), f"window {i}: coeff bits"
+        assert (float(bs) == float(bb)
+                or (np.isnan(bs) and np.isnan(bb))), f"window {i}: b"
+
+
+# ------------------------------------------------------------------ horner
+def test_horner_degree0_regression():
+    # used to raise IndexError: coeffs[0] was read before the guard
+    x = np.linspace(-1.0, 1.0, 17)
+    out = horner([], 0.625, x)
+    assert out.shape == x.shape
+    assert (out == 0.625).all()
+
+
+def test_horner_degree1_matches_manual():
+    x = np.linspace(-1.0, 1.0, 17)
+    assert np.array_equal(horner([2.0], -0.5, x), 2.0 * x - 0.5)
+
+
+# -------------------------------------------------------------- bit parity
+@pytest.mark.parametrize("degree", [1, 2])
+@pytest.mark.parametrize("naf", ["sigmoid", "tanh_wide", "gelu_inner",
+                                 "softplus", "recip", "log2"])
+def test_batch_matches_serial(naf, degree):
+    x, f = _grid(naf)
+    windows = [(x[s:e], f[s:e]) for s, e in _slices(x.size)]
+    serial = [fit_minimax(xx, ff, degree) for xx, ff in windows]
+    batched = fit_minimax_batch(windows, degree)
+    assert_bit_identical(serial, batched)
+
+
+@pytest.mark.parametrize("degree", [1, 2, 3])
+def test_batch_degenerate_only(degree):
+    # every window degenerate (G <= ncoef): the batch must reproduce the
+    # serial interpolation/constant fallbacks exactly, including empty
+    x, f = _grid("sigmoid")
+    ncoef = degree + 1
+    windows = [(x[:g], f[:g]) for g in range(ncoef + 1)]
+    serial = [fit_minimax(xx, ff, degree) for xx, ff in windows]
+    batched = fit_minimax_batch(windows, degree)
+    assert_bit_identical(serial, batched)
+
+
+def test_batch_single_and_duplicate_windows():
+    x, f = _grid("tanh")
+    w = (x[: x.size // 2], f[: x.size // 2])
+    serial = [fit_minimax(*w, 1)] * 3
+    batched = fit_minimax_batch([w, w, w], 1)
+    assert_bit_identical(serial, batched)
+    assert_bit_identical([serial[0]], fit_minimax_batch([w], 1))
+
+
+def test_batch_mixed_sizes_across_zoo():
+    # one batch spanning every NAF and wildly different window lengths —
+    # the padded lockstep must not leak one window's grid into another's
+    windows, serial = [], []
+    for i, naf in enumerate(ZOO):
+        x, f = _grid(naf)
+        e = max(3, x.size // (i + 1))
+        windows.append((x[:e], f[:e]))
+        serial.append(fit_minimax(x[:e], f[:e], 2))
+    assert_bit_identical(serial, fit_minimax_batch(windows, 2))
+
+
+# --------------------------------------------------- _pick_extrema parity
+def _pick_extrema_old(err, m):
+    """The original per-grid-point Python loop, kept verbatim as the
+    reference the vectorized scan must reproduce index-for-index."""
+    G = err.size
+    cand = [0]
+    for i in range(1, G - 1):
+        if (err[i] - err[i - 1]) * (err[i + 1] - err[i]) <= 0:
+            cand.append(i)
+    cand.append(G - 1)
+    cand = np.unique(cand)
+    order = cand[np.argsort(-np.abs(err[cand]))]
+    picked = []
+    for i in order:
+        s = np.sign(err[i])
+        ok = True
+        for j in picked:
+            if np.sign(err[j]) == s and abs(i - j) < max(1, G // (4 * m)):
+                ok = False
+                break
+        if ok:
+            picked.append(int(i))
+        if len(picked) == m:
+            break
+    if len(picked) < m:
+        extra = [int(i) for i in cand if int(i) not in picked]
+        picked.extend(extra[: m - len(picked)])
+    if len(picked) < m:
+        return None
+    return np.sort(np.array(picked[:m]))
+
+
+@pytest.mark.parametrize("m", [3, 4, 5])
+def test_pick_extrema_matches_old_loop(m):
+    rng = np.random.default_rng(1234)
+    signals = [
+        np.sin(np.linspace(0.0, 9.0, 101)),          # alternating ripple
+        rng.standard_normal(64),                      # noise
+        np.zeros(33),                                 # all-flat ties
+        np.linspace(-1.0, 1.0, 40),                   # monotone, no interior
+        rng.standard_normal(5),                       # G barely above m
+        np.array([0.3, -0.7]),                        # G == 2
+    ]
+    # plus real Remez error signals: fit then re-evaluate the residual
+    x, f = _grid("sigmoid")
+    coeffs, b = fit_minimax(x, f, m - 2) if m > 2 else (None, None)
+    if coeffs is not None:
+        signals.append(horner(coeffs, b, x) - f)
+    for k, err in enumerate(signals):
+        old = _pick_extrema_old(err, m)
+        new = _pick_extrema(err, m)
+        if old is None:
+            assert new is None, f"signal {k}"
+        else:
+            assert new is not None and np.array_equal(old, new), \
+                f"signal {k}: {old} != {new}"
+
+
+# -------------------------------------------------------- hypothesis sweep
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYP = True
+except ImportError:          # pragma: no cover - optional dependency
+    HAVE_HYP = False
+
+if HAVE_HYP:
+    @st.composite
+    def partitions(draw):
+        naf = draw(st.sampled_from(["sigmoid", "tanh_wide", "exp2_frac",
+                                    "silu", "rsqrt"]))
+        degree = draw(st.integers(min_value=1, max_value=2))
+        x, f = _grid(naf)
+        n = draw(st.integers(min_value=1, max_value=8))
+        cuts = sorted(draw(st.lists(
+            st.integers(min_value=0, max_value=x.size),
+            min_size=n, max_size=n)))
+        bounds = [0] + cuts + [x.size]
+        wins = [(x[s:e], f[s:e]) for s, e in zip(bounds, bounds[1:])]
+        return wins, degree
+
+    @settings(max_examples=25, deadline=None)
+    @given(partitions())
+    def test_random_partitions_bit_identical(case):
+        wins, degree = case
+        serial = [fit_minimax(xx, ff, degree) for xx, ff in wins]
+        assert_bit_identical(serial, fit_minimax_batch(wins, degree))

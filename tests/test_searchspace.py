@@ -232,6 +232,50 @@ def test_speculative_tbw_plain_evaluator_degrades():
         == [(s.start, s.end, s.fit.a_int, s.fit.b_int) for s in spec]
 
 
+# ------------------------------------------- prefetch batched Remez (PR 7)
+@needs_jax
+def test_prefetch_uses_batched_fits():
+    """With speculation on, a fresh session's prefetch must route fresh
+    plan windows through ``fit_minimax_batch`` (counted per evaluator),
+    and disabling the policy must leave the artifact byte-identical —
+    batching is an execution knob, never a result knob."""
+    sch = PPAScheme(1, None, "fqa")
+
+    def compile_once(batch_prefetch):
+        old = MemoizedSegmentEvaluator.PREFETCH_FRESH_REMEZ
+        MemoizedSegmentEvaluator.PREFETCH_FRESH_REMEZ = batch_prefetch
+        try:
+            sess = CompilerSession()
+            tab = compile_table("sigmoid", CFG1, sch, session=sess,
+                                search_backend="jax", speculate=3)
+            return tab, sess.counters()
+        finally:
+            MemoizedSegmentEvaluator.PREFETCH_FRESH_REMEZ = old
+
+    t_batch, c_batch = compile_once(True)
+    t_plain, c_plain = compile_once(False)
+    assert c_batch["remez_batches"] > 0
+    assert c_batch["remez_batch_windows"] > 0
+    assert c_batch["remez_batch_windows"] >= c_batch["remez_batches"]
+    assert c_plain["remez_batches"] == 0
+    assert c_plain["remez_batch_windows"] == 0
+    assert table_identity(t_batch) == table_identity(t_plain)
+
+
+def test_cross_naf_warm_seed_identity():
+    """Compiling a related NAF in the same session seeds warm candidates
+    (counted on the session) without changing either artifact."""
+    sch = PPAScheme(1, None, "fqa")
+    solo = {n: compile_table(n, CFG1, sch, session=CompilerSession())
+            for n in ("sigmoid", "sigmoid_wide")}
+    sess = CompilerSession()
+    shared = {n: compile_table(n, CFG1, sch, session=sess)
+              for n in ("sigmoid", "sigmoid_wide")}
+    for n in solo:
+        assert table_identity(solo[n]) == table_identity(shared[n])
+    assert sess.counters()["cross_warm_seeds"] > 0
+
+
 # ------------------------------------------------------ store_cap satellite
 def test_full_mode_store_cap_counts_rows():
     """The cap bounds *rows actually accumulated*: with a loose target the
