@@ -1,90 +1,15 @@
-"""Print the top memory / collective contributors for one dry-run cell.
+"""Back-compat shim: the HLO audit now lives in ``repro.analysis.hlo``.
 
   PYTHONPATH=src python scripts/audit_hlo.py <arch> <shape> [variant] [--multi-pod]
+
+is equivalent to
+
+  PYTHONPATH=src python -m repro.analysis --hlo <arch> <shape> [variant] [--multi-pod]
 """
 
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-
-import re
 import sys
 
-from repro.launch.dryrun import lower_cell
-from repro.roofline.hlo_costs import (_COMP_HDR, _KNOWN_TRIPS, _NAME_REF,
-                                      _NO_MATERIALIZE, _callees,
-                                      _shape_bytes, _split_computations)
-
-CONTROL = {"while", "call", "conditional", "custom-call"}
-
-
-def main():
-    arch, shape = sys.argv[1], sys.argv[2]
-    variant = sys.argv[3] if len(sys.argv) > 3 and not sys.argv[3].startswith("--") else "baseline"
-    multi = "--multi-pod" in sys.argv
-    compiled, meta = lower_cell(arch, shape, multi, variant)
-    txt = compiled.as_text()
-    comps = _split_computations(txt)
-    symbols = {c: {o.name: o.shape for o in ops} for c, ops in comps.items()}
-
-    entry = next(l for l in txt.splitlines() if l.startswith("ENTRY"))
-    ename = _COMP_HDR.match(entry.strip()).group(1)
-    mult = {ename: 1.0}
-    stack = [ename]
-    fus = set()
-    while stack:
-        c = stack.pop()
-        base = mult[c]
-        for op in comps.get(c, []):
-            cs = _callees(op)
-            if op.kind == "while":
-                mk = _KNOWN_TRIPS.search(op.attrs)
-                trips = int(mk.group(1)) if mk else 1
-                for r, n in cs:
-                    if r in ("body", "condition") and \
-                            mult.get(n, 0) < base * trips:
-                        mult[n] = base * trips
-                        stack.append(n)
-            else:
-                for r, n in cs:
-                    if op.kind == "fusion":
-                        fus.add(n)
-                    if mult.get(n, 0) < base:
-                        mult[n] = base
-                        stack.append(n)
-
-    mem_rows, coll_rows = [], []
-    for c, ops in comps.items():
-        m = mult.get(c)
-        if m is None or c in fus:
-            continue
-        for op in ops:
-            meta_m = re.search(r'op_name="([^"]*)"', op.args + op.attrs)
-            tag = meta_m.group(1)[-70:] if meta_m else ""
-            base_kind = re.sub(r"-(start|done)$", "", op.kind)
-            if base_kind in ("all-gather", "all-reduce", "reduce-scatter",
-                             "all-to-all", "collective-permute") \
-                    and not op.kind.endswith("-done"):
-                coll_rows.append((m * _shape_bytes(op.shape), m, base_kind,
-                                  tag))
-            if op.kind in _NO_MATERIALIZE or op.kind in CONTROL \
-                    or op.kind.endswith("-done"):
-                continue
-            b = _shape_bytes(op.shape) + sum(
-                _shape_bytes(symbols[c].get(n, ""))
-                for n in _NAME_REF.findall(op.args))
-            mem_rows.append((m * b, m, op.kind, tag))
-
-    print(f"\n=== {arch} x {shape} x {variant} "
-          f"({'multipod' if multi else 'pod'}) ===")
-    print("--- top memory ops ---")
-    mem_rows.sort(reverse=True)
-    for b, m, k, tag in mem_rows[:14]:
-        print(f"{b / 2**30:9.2f}GiB x{int(m):4d} {k:22s} {tag}")
-    print("--- top collectives ---")
-    coll_rows.sort(reverse=True)
-    for b, m, k, tag in coll_rows[:10]:
-        print(f"{b / 2**30:9.3f}GiB x{int(m):4d} {k:18s} {tag}")
-
+from repro.analysis.hlo import main
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main(sys.argv[1:]))

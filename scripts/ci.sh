@@ -44,6 +44,15 @@
 #                         picked up by compile_or_load, and leave the
 #                         compiled artifact byte-identical to an untuned
 #                         compile
+#   scripts/ci.sh analyze
+#                         static-analysis tier: the JAX hot-path lint over
+#                         the golden/serving/compiler files must come back
+#                         clean (every deliberate exception carries an
+#                         inline "analysis: allow(<rule>)" justification),
+#                         then the smoke grid is compiled and every config
+#                         gets an exact per-segment bit-width certificate —
+#                         overflow-freedom proven, or CI fails with the
+#                         concrete violating interval
 #   scripts/ci.sh docs-check
 #                         every python snippet in docs/*.md parses and
 #                         its imports resolve; intra-repo doc links are
@@ -84,6 +93,10 @@ case "$mode" in
     trap 'rm -rf "$tunedir"' EXIT
     exec python -m repro.tune.autotune --store "$tunedir" --smoke --verify
     ;;
+  analyze)
+    python -m repro.analysis --lint "$@" || exit 1
+    exec python -m repro.analysis --certify-grid --smoke
+    ;;
   docs-check)
     exec python scripts/docs_check.py "$@"
     ;;
@@ -96,7 +109,7 @@ case "$mode" in
     ;;
   *)
     echo "usage: scripts/ci.sh" \
-         "[tier1|fast|bench-smoke|sweep-smoke|search-smoke|serve-smoke|tune-smoke|docs-check]" \
+         "[tier1|fast|bench-smoke|sweep-smoke|search-smoke|serve-smoke|tune-smoke|analyze|docs-check]" \
          "[extra args...]" >&2
     exit 2
     ;;

@@ -53,6 +53,35 @@ def bench_headlines():
                 continue
             detail = " ".join(f"{k}={r[k]}" for k in sorted(keys))
             print(f"| {f.name} | {name} | {detail} |")
+    cert_table()
+
+
+def cert_table():
+    """Per-config bit-width certificates (``repro.analysis``) stored next
+    to the compiled tables: proven integer word lengths and the
+    overflow-freedom verdict for each artifact."""
+    certs = sorted((ROOT / "artifacts" / "ppa_tables").glob("*.cert.json"))
+    rows = []
+    for f in certs:
+        try:
+            c = json.loads(f.read_text())
+        except (OSError, ValueError):
+            continue
+        nodes = c.get("nodes", [])
+        if not nodes:
+            continue
+        widest = max(nodes, key=lambda n: n.get("bits", 0))
+        rows.append((c.get("naf", "?"), c.get("scheme_tag", "?"),
+                     max(n.get("iwl", 0) for n in nodes),
+                     widest.get("bits", 0), widest.get("name", "?"),
+                     "ok" if not c.get("violations") else "OVERFLOW"))
+    if not rows:
+        return
+    print("\n### Bit-width certificates (proven, per segment)\n")
+    print("| naf | scheme | max IWL | max bits | widest node | verdict |")
+    print("|---|---|---|---|---|---|")
+    for naf, tag, iwl, bits, node, verdict in sorted(rows):
+        print(f"| {naf} | {tag} | {iwl} | {bits} | {node} | {verdict} |")
 
 
 def main():

@@ -1,0 +1,43 @@
+"""Static analysis layer: datapath bit-width certification + hot-path lint.
+
+Two engines behind one CLI (``python -m repro.analysis``):
+
+* :mod:`repro.analysis.intervals` / :mod:`repro.analysis.certify` — an
+  abstract interpreter over the *actual* ``horner_body`` code object
+  (interval domain over scaled integers) that proves, per intermediate,
+  the integer word length required for a given NAF interval and
+  coefficient set, and emits a machine-readable certificate the
+  ``TableStore`` keeps next to the artifact.
+* :mod:`repro.analysis.lint` — AST checks for the failure modes this
+  codebase actually has: float contamination in integer golden paths,
+  Python-level branching on tracers, host syncs in serving/search hot
+  loops, nondeterministic iteration feeding cache keys.
+
+:mod:`repro.analysis.hlo` folds the old ``scripts/audit_hlo.py`` HLO
+audit into the same CLI/report format.
+"""
+
+from .intervals import Interval, NodeBound, abstract_horner, node_fwls
+from .certify import (
+    CERT_VERSION,
+    Certificate,
+    Violation,
+    certify_config,
+    certify_table,
+)
+from .lint import Finding, lint_paths, DEFAULT_LINT_TARGETS
+
+__all__ = [
+    "Interval",
+    "NodeBound",
+    "abstract_horner",
+    "node_fwls",
+    "CERT_VERSION",
+    "Certificate",
+    "Violation",
+    "certify_config",
+    "certify_table",
+    "Finding",
+    "lint_paths",
+    "DEFAULT_LINT_TARGETS",
+]

@@ -1,0 +1,112 @@
+"""HLO audit: top memory / collective contributors for one dry-run cell.
+
+The old ``scripts/audit_hlo.py`` folded into the analysis package so HLO
+auditing, lint and certification share one CLI (``python -m repro.analysis
+--hlo <arch> <shape> ...``) and one report format (:mod:`.report`).  A thin
+shim remains at the old script path.
+"""
+
+from __future__ import annotations
+
+import os
+import re
+from typing import List, Tuple
+
+from .report import render
+
+__all__ = ["audit_cell", "main"]
+
+CONTROL = {"while", "call", "conditional", "custom-call"}
+
+
+def audit_cell(arch: str, shape: str, variant: str = "baseline",
+               multi_pod: bool = False):
+    """Lower one dry-run cell and rank its memory / collective ops.
+
+    Returns ``(mem_rows, coll_rows)`` — lists of dicts sorted by bytes
+    descending (``gib`` carries the multiplicity-weighted total).
+    """
+    os.environ.setdefault("XLA_FLAGS",
+                          "--xla_force_host_platform_device_count=512")
+    from repro.launch.dryrun import lower_cell
+    from repro.roofline.hlo_costs import (_COMP_HDR, _KNOWN_TRIPS, _NAME_REF,
+                                          _NO_MATERIALIZE, _callees,
+                                          _shape_bytes, _split_computations)
+
+    compiled, _meta = lower_cell(arch, shape, multi_pod, variant)
+    txt = compiled.as_text()
+    comps = _split_computations(txt)
+    symbols = {c: {o.name: o.shape for o in ops} for c, ops in comps.items()}
+
+    entry = next(l for l in txt.splitlines() if l.startswith("ENTRY"))
+    ename = _COMP_HDR.match(entry.strip()).group(1)
+    mult = {ename: 1.0}
+    stack = [ename]
+    fus = set()
+    while stack:
+        c = stack.pop()
+        base = mult[c]
+        for op in comps.get(c, []):
+            cs = _callees(op)
+            if op.kind == "while":
+                mk = _KNOWN_TRIPS.search(op.attrs)
+                trips = int(mk.group(1)) if mk else 1
+                for r, n in cs:
+                    if r in ("body", "condition") and \
+                            mult.get(n, 0) < base * trips:
+                        mult[n] = base * trips
+                        stack.append(n)
+            else:
+                for r, n in cs:
+                    if op.kind == "fusion":
+                        fus.add(n)
+                    if mult.get(n, 0) < base:
+                        mult[n] = base
+                        stack.append(n)
+
+    mem_rows, coll_rows = [], []
+    for c, ops in comps.items():
+        m = mult.get(c)
+        if m is None or c in fus:
+            continue
+        for op in ops:
+            meta_m = re.search(r'op_name="([^"]*)"', op.args + op.attrs)
+            tag = meta_m.group(1)[-70:] if meta_m else ""
+            base_kind = re.sub(r"-(start|done)$", "", op.kind)
+            if base_kind in ("all-gather", "all-reduce", "reduce-scatter",
+                             "all-to-all", "collective-permute") \
+                    and not op.kind.endswith("-done"):
+                coll_rows.append({"gib": m * _shape_bytes(op.shape) / 2**30,
+                                  "x": int(m), "kind": base_kind, "tag": tag})
+            if op.kind in _NO_MATERIALIZE or op.kind in CONTROL \
+                    or op.kind.endswith("-done"):
+                continue
+            b = _shape_bytes(op.shape) + sum(
+                _shape_bytes(symbols[c].get(n, ""))
+                for n in _NAME_REF.findall(op.args))
+            mem_rows.append({"gib": m * b / 2**30, "x": int(m),
+                             "kind": op.kind, "tag": tag})
+
+    mem_rows.sort(key=lambda r: r["gib"], reverse=True)
+    coll_rows.sort(key=lambda r: r["gib"], reverse=True)
+    return mem_rows, coll_rows
+
+
+def main(argv: List[str], *, json_mode: bool = False) -> int:
+    if len(argv) < 2:
+        print("usage: python -m repro.analysis --hlo <arch> <shape> "
+              "[variant] [--multi-pod]")
+        return 2
+    arch, shape = argv[0], argv[1]
+    variant = (argv[2] if len(argv) > 2 and not argv[2].startswith("--")
+               else "baseline")
+    multi = "--multi-pod" in argv
+    mem, coll = audit_cell(arch, shape, variant, multi)
+    pod = "multipod" if multi else "pod"
+    for r in mem + coll:
+        r["gib"] = f"{r['gib']:.3f}"
+    render(f"hlo memory: {arch} x {shape} x {variant} ({pod})",
+           mem[:14], ("gib", "x", "kind", "tag"), json_mode=json_mode)
+    render(f"hlo collectives: {arch} x {shape} x {variant} ({pod})",
+           coll[:10], ("gib", "x", "kind", "tag"), json_mode=json_mode)
+    return 0

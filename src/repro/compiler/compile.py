@@ -39,6 +39,14 @@ __all__ = ["CompilerSession", "compile_table", "resolve_defaults",
 #: — the operator knob for TBW speculative probe batching (depth; 0 = off).
 SPECULATE_ENV = "REPRO_TBW_SPECULATE"
 
+#: env var making every compile end with an exact bit-width certification
+#: (repro.analysis.certify): a table any intermediate of which can exceed
+#: the kernel carrier is refused with the violating interval instead of
+#: being returned.  Off by default — the CI ``analyze`` tier and the
+#: ``--certify-grid`` CLI run certification explicitly and persist the
+#: certificates through the store.
+CERTIFY_ENV = "REPRO_CERTIFY"
+
 
 def resolve_speculate(speculate: Optional[int]) -> int:
     if speculate is not None:
@@ -266,4 +274,13 @@ def compile_table(
     if re_mae > mae_hard + 1e-12:
         raise AssertionError(
             f"packed-table MAE {re_mae} exceeds per-segment MAE {mae_hard}")
+    if os.environ.get(CERTIFY_ENV, "") not in ("", "0"):
+        from repro.analysis.certify import certify_table
+        cert = certify_table(table)
+        if not cert.ok:
+            raise OverflowError(
+                f"{spec.name} {scheme.tag}: datapath overflows its carrier: "
+                + "; ".join(v.describe() for v in cert.violations))
+        # deliberately not recorded in table.stats: an env knob must never
+        # change the artifact bytes (the bit-identity contract)
     return table

@@ -151,6 +151,9 @@ class TableStore:
         self.evictions = 0
         self.compiles = 0       # actual compiler runs charged to this store
         self.tuned_applied = 0  # compiles that picked up a tuned config
+        self.certs_checked = 0  # certificate staleness checks performed
+        self.certs_stale = 0    # stale certificates retired on load
+        self._cert_seen: set = set()    # keys staleness-checked this process
 
     @property
     def root(self) -> Path:
@@ -161,6 +164,81 @@ class TableStore:
 
     def _path(self, job: CompileJob, key: str) -> Path:
         return self.root / f"{job.naf}-{job.scheme.tag}-{key}.json"
+
+    # -- bit-width certificates ------------------------------------------------
+    # The analysis layer's overflow-freedom proof (repro.analysis.certify)
+    # lives next to each artifact as <artifact>.cert.json, stamped with the
+    # certificate schema version, the CompileJob.VERSION and the store key.
+    # compile_or_load retires mismatched-stamp certificates (once per key
+    # per process — the hot path stays a dict lookup); it never *requires*
+    # one, so certification stays an explicit, separately-gated step.
+
+    def cert_path(self, job: CompileJob) -> Path:
+        job = job.resolved()
+        return self._path(job, job.key()).with_suffix(".cert.json")
+
+    def certify(self, job: CompileJob, table: Optional[PPATable] = None):
+        """Prove (exact, per-segment) bit-width safety of ``job``'s table
+        and persist the stamped certificate next to the artifact.
+
+        Compiles/loads the table if not supplied.  Returns the
+        :class:`repro.analysis.certify.Certificate` (check ``cert.ok``)."""
+        from repro.analysis.certify import certify_table
+        job = job.resolved()
+        key = job.key()
+        if table is None:
+            table = self.compile_or_load(
+                job.naf, job.cfg, job.scheme, mae_t=job.mae_t,
+                interval=job.interval, tseg=job.tseg,
+                final_mode=job.final_mode)
+        cert = certify_table(table)
+        cert.meta = {"v": CompileJob.VERSION, "key": key}
+        if self.persist:
+            path = self.cert_path(job)
+            tmp = _tmp_name(path)
+            tmp.write_text(cert.to_json())
+            os.replace(tmp, path)   # atomic publish, like _put
+        self._cert_seen.add(key)
+        return cert
+
+    def load_certificate(self, job: CompileJob):
+        """The stored certificate for ``job`` (stamps verified), or None."""
+        from repro.analysis.certify import CERT_VERSION, Certificate
+        job = job.resolved()
+        if not self.persist:
+            return None
+        path = self.cert_path(job)
+        try:
+            cert = Certificate.load(path)
+        except (OSError, ValueError, KeyError, TypeError):
+            return None
+        if cert.cert_version != CERT_VERSION \
+                or cert.meta.get("v") != CompileJob.VERSION \
+                or cert.meta.get("key") != job.key():
+            return None
+        return cert
+
+    def _check_cert(self, job: CompileJob, key: str) -> None:
+        """Retire a stale certificate (mismatched version/key stamps) the
+        first time ``key`` is served this process."""
+        if key in self._cert_seen or not self.persist:
+            return
+        self._cert_seen.add(key)
+        path = self._path(job, key).with_suffix(".cert.json")
+        if not path.exists():
+            return
+        self.certs_checked += 1
+        from repro.analysis.certify import CERT_VERSION, Certificate
+        try:
+            cert = Certificate.load(path)
+            fresh = (cert.cert_version == CERT_VERSION
+                     and cert.meta.get("v") == CompileJob.VERSION
+                     and cert.meta.get("key") == key)
+        except (OSError, ValueError, KeyError, TypeError):
+            fresh = False
+        if not fresh:
+            path.unlink(missing_ok=True)
+            self.certs_stale += 1
 
     # -- tiers -----------------------------------------------------------------
     def _remember(self, key: str, table: PPATable) -> None:
@@ -284,11 +362,13 @@ class TableStore:
         key = job.key()
         tab = self._lookup(job, key)
         if tab is not None:
+            self._check_cert(job, key)
             return tab
         self.misses += 1
         self.compiles += 1
         tab = self._apply_tuned(job).compile(session)
         self._put(job, key, tab)
+        self._check_cert(job, key)
         return tab
 
     def _apply_tuned(self, job: CompileJob) -> CompileJob:
@@ -509,6 +589,8 @@ class TableStore:
         # even if some other (refused) manifest also names it
         refused -= set(manifested)
         for path in sorted(other.glob("*.json")):
+            if path.name.endswith(".cert.json"):
+                continue    # certificates travel with their artifact's key
             if path.name in manifested:
                 key = manifested[path.name]
             elif path.name in refused:
@@ -562,7 +644,11 @@ class TableStore:
         if not self.persist or (max_files is None and max_age_s is None):
             return []
         entries = []                        # stat once, tolerate other
+        # entries are sorted by mtime just below; filesystem order never
+        # reaches keys or results.  analysis: allow(nondet-iter)
         for p in self.root.glob("*.json"):  # processes pruning concurrently
+            if p.name.endswith(".cert.json"):
+                continue        # certs are pruned with their artifact below
             try:
                 entries.append((p, p.stat().st_mtime))
             except OSError:
@@ -580,6 +666,8 @@ class TableStore:
                 p.unlink()
             except OSError:
                 continue
+            # an orphaned certificate proves nothing anyone can load
+            p.with_suffix(".cert.json").unlink(missing_ok=True)
             removed.append(p)
         return removed
 
@@ -616,6 +704,10 @@ class TableStore:
 
         removed: List[Path] = []
         for path in sorted(self.root.glob("*.json")):
+            if path.name.endswith(".cert.json"):
+                # certificates carry their own stamps, checked (and stale
+                # ones retired) on compile_or_load rather than swept here
+                continue
             v = stamped_version(path)
             if v == CompileJob.VERSION or (v is None and keep_unversioned):
                 continue
@@ -624,6 +716,7 @@ class TableStore:
                 path.unlink()
             except OSError:
                 continue
+            path.with_suffix(".cert.json").unlink(missing_ok=True)
             removed.append(path)
         for man in sorted(self.root.glob("*.manifest")):
             if stamped_version(man) == CompileJob.VERSION:
@@ -639,7 +732,9 @@ class TableStore:
         return {"hits_mem": self.hits_mem, "hits_disk": self.hits_disk,
                 "misses": self.misses, "in_memory": len(self._mem),
                 "evictions": self.evictions, "compiles": self.compiles,
-                "pinned": len(self._pinned)}
+                "pinned": len(self._pinned),
+                "certs_checked": self.certs_checked,
+                "certs_stale": self.certs_stale}
 
 
 _DEFAULT: Optional[TableStore] = None

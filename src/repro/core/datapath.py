@@ -162,7 +162,7 @@ def apply_shift(v, sh: int):
 
 
 def horner_body(plan: DatapathPlan, sel: Sequence, x, *,
-                return_pre_b: bool = False):
+                return_pre_b: bool = False, tap=None):
     """The one fixed-point Horner chain shared by every executor.
 
     Args:
@@ -170,6 +170,15 @@ def horner_body(plan: DatapathPlan, sel: Sequence, x, *,
       sel: sequence of ``order + 1`` *pre-selected* coefficient arrays
         (a_1..a_n then b), already broadcast/selected per element of ``x``.
       x: integer input array at FWL ``plan.w_in``.
+      tap: optional ``tap(name, value)`` callback observing every named
+        intermediate as it is computed — ``p{i}`` (multiplier output, the
+        rounder addend included, i.e. the value entering the truncation
+        shifter), ``h{i}`` (post-truncation), ``g{i}`` (concat-adder
+        output), ``sum`` (intercept adder output, pre ``down_out``) and
+        ``out``.  :mod:`repro.analysis` drives the body through this hook
+        both concretely (soundness tests) and abstractly (the interval
+        domain): the certifier executes *this* code object, so the proof
+        cannot drift from the datapath.  ``None`` adds no work.
 
     Only ``* + >> <<`` are used, so the body is array-namespace agnostic:
     numpy arrays, jnp arrays and Pallas-traced values all run the identical
@@ -179,20 +188,32 @@ def horner_body(plan: DatapathPlan, sel: Sequence, x, *,
         raise ValueError(
             f"expected {plan.order + 1} coefficient arrays, got {len(sel)}")
 
-    def trunc_mult(v, sh):
+    def trunc_mult(v, sh, name):
         # round-half-up only at multiplier-output truncations (round_mults)
         if plan.round_mults and sh > 0:
             v = v + (1 << (sh - 1))
+        if tap is not None:
+            tap(name, v)
         return apply_shift(v, sh)
 
-    h = trunc_mult(sel[0] * x, plan.mult_shifts[0])
+    h = trunc_mult(sel[0] * x, plan.mult_shifts[0], "p1")
+    if tap is not None:
+        tap("h1", h)
     for i in range(1, plan.order):
         g = apply_shift(h, -plan.up_g[i - 1]) \
             + apply_shift(sel[i], -plan.up_a[i - 1])
-        h = trunc_mult(g * x, plan.mult_shifts[i])
+        if tap is not None:
+            tap(f"g{i}", g)
+        h = trunc_mult(g * x, plan.mult_shifts[i], f"p{i + 1}")
+        if tap is not None:
+            tap(f"h{i + 1}", h)
     out = apply_shift(h, -plan.up_h) + apply_shift(sel[plan.order],
                                                    -plan.up_b)
+    if tap is not None:
+        tap("sum", out)
     out = apply_shift(out, plan.down_out)
+    if tap is not None:
+        tap("out", out)
     if return_pre_b:
         return out, (h, plan.w_pre_b)
     return out
@@ -216,6 +237,7 @@ def horner_fixed(
     cfg: FWLConfig,
     *,
     return_pre_b: bool = False,
+    tap=None,
 ):
     """Evaluate the order-n fixed-point Horner datapath.
 
@@ -227,6 +249,8 @@ def horner_fixed(
       x_int: input grid integers at FWL cfg.w_in, shape (..., G).
       return_pre_b: also return (h_n, fwl) before the intercept add — used
         by the quantizer's error-flattening step.
+      tap: optional intermediate observer, forwarded to
+        :func:`horner_body` (see its docstring for the node names).
 
     Returns:
       out_int with FWL cfg.w_out (plus optional pre-b tuple).
@@ -238,4 +262,4 @@ def horner_fixed(
     sel = [np.asarray(a)[..., None] for a in a_int]
     sel.append(np.asarray(b_int)[..., None])
     return horner_body(DatapathPlan.from_config(cfg), sel, x,
-                       return_pre_b=return_pre_b)
+                       return_pre_b=return_pre_b, tap=tap)

@@ -27,6 +27,7 @@ __all__ = [
     "grid_for_interval",
     "hamming_weight",
     "min_signed_digits",
+    "signed_bits",
 ]
 
 
@@ -70,6 +71,22 @@ def grid_for_interval(xs: float, xe: float, w_in: int) -> np.ndarray:
     lo = int(np.ceil(xs * (1 << w_in) - 1e-12))
     hi = int(np.ceil(xe * (1 << w_in) - 1e-12))
     return np.arange(lo, hi, dtype=np.int64)
+
+
+def signed_bits(lo: int, hi: int) -> int:
+    """Minimal two's-complement width holding every integer in [lo, hi].
+
+    The width the analysis layer certifies each datapath intermediate
+    against: a b-bit signed register holds [-2**(b-1), 2**(b-1) - 1].
+    """
+    if lo > hi:
+        raise ValueError(f"empty interval [{lo}, {hi}]")
+    bits = 1
+    if hi > 0:
+        bits = max(bits, int(hi).bit_length() + 1)
+    if lo < 0:
+        bits = max(bits, int(-lo - 1).bit_length() + 1)
+    return bits
 
 
 def hamming_weight(ix) -> np.ndarray:

@@ -51,19 +51,30 @@ def _bits_o(w_o: int) -> int:
     return w_o + 2
 
 
-def cost_features(table: PPATable) -> np.ndarray:
-    """Feature vector [mult_fa, adder_bits, cmp_bits, lut_bits, shift_mux, 1]."""
+def cost_features(table: PPATable, cert=None) -> np.ndarray:
+    """Feature vector [mult_fa, adder_bits, cmp_bits, lut_bits, shift_mux, 1].
+
+    With a :class:`repro.analysis.certify.Certificate` for this table, the
+    ``+2`` integer-headroom heuristics are replaced by the *proven* node
+    widths (``bits`` of p/g/sum) — the register sizing a reconfigurable
+    unit (GRAU-style) would actually provision.  Without one, the seed
+    heuristics apply unchanged, so existing calibrations stay bit-stable.
+    """
     cfg = table.cfg
     s = table.num_segments
     n = cfg.order
     m = table.scheme.m_shifters
+    nb = ({d["name"]: d["bits"] for d in cert.nodes}
+          if cert is not None else {})
 
     mult_fa = 0.0
     adder_bits = 0.0
     shift_mux = 0.0
-    # stage 1
+    # stage 1: proven product width implies the coefficient operand width
+    bits_a1 = (max(nb["p1"] - _bits_x(cfg.w_in) + 1, 1) if "p1" in nb
+               else _bits_a(cfg.w_a[0]))
     if m is None:
-        mult_fa += _bits_a(cfg.w_a[0]) * _bits_x(cfg.w_in)
+        mult_fa += bits_a1 * _bits_x(cfg.w_in)
     else:
         # m shifters (wiring) + (m-1) adders at product width + select muxes
         adder_bits += (m - 1) * _bits_o(cfg.w_o[0])
@@ -72,11 +83,11 @@ def cost_features(table: PPATable) -> np.ndarray:
     for i in range(1, n):
         w_m = max(cur, cfg.w_a[i])
         # concat adder works at min(prev out, coeff) width (paper Fig. 3)
-        adder_bits += min(cur, cfg.w_a[i]) + 2
-        mult_fa += (w_m + 2) * _bits_x(cfg.w_in)
+        adder_bits += nb.get(f"g{i}", min(cur, cfg.w_a[i]) + 2)
+        mult_fa += nb.get(f"g{i}", w_m + 2) * _bits_x(cfg.w_in)
         cur = cfg.w_o[i]
     # final intercept adder
-    adder_bits += min(cur, cfg.w_b) + 2
+    adder_bits += nb.get("sum", min(cur, cfg.w_b) + 2)
 
     cmp_bits = (s - 1) * _bits_x(cfg.w_in)
     # coefficient LUT: shared rows only (paper's coefficient-unification)
@@ -193,12 +204,16 @@ def calibrate() -> Dict[str, np.ndarray]:
 CALIBRATION: Optional[Dict[str, np.ndarray]] = None
 
 
-def estimate_cost(table: PPATable) -> HWCost:
-    """Price a compiled table with the calibrated unit-gate model."""
+def estimate_cost(table: PPATable, cert=None) -> HWCost:
+    """Price a compiled table with the calibrated unit-gate model.
+
+    Pass the table's bit-width certificate to size adders/multiplier
+    operands by their *proven* widths instead of the +2 headroom
+    heuristics (see :func:`cost_features`)."""
     global CALIBRATION
     if CALIBRATION is None:
         CALIBRATION = calibrate()
-    f = cost_features(table)
+    f = cost_features(table, cert)
     area = float(f @ CALIBRATION["area"])
     power = float(f @ CALIBRATION["power"])
     cfg = table.cfg

@@ -334,6 +334,9 @@ class JaxSearchBackend(SearchBackend):
             mae, b_int, mae0 = fn(jnp.asarray(a_stack),
                                   jnp.asarray(np.int64(ctx.b_fixed)),
                                   x, f, f_q)
+            # backend contract: eval_block returns host numpy — ONE sync
+            # per dispatched block, at the API boundary, by design.
+            # analysis: allow(host-sync)
             return (np.asarray(mae)[:k], np.asarray(b_int)[:k],
                     np.asarray(mae0)[:k])
 
@@ -376,6 +379,9 @@ class JaxSearchBackend(SearchBackend):
             mae, b_int, mae0 = fn(jnp.asarray(a), jnp.asarray(b_fixed),
                                   jnp.asarray(x), jnp.asarray(f),
                                   jnp.asarray(f_q))
+            # backend contract: one sync for the WHOLE multi-window batch
+            # (that amortization is this method's reason to exist).
+            # analysis: allow(host-sync)
             mae, b_int, mae0 = (np.asarray(mae), np.asarray(b_int),
                                 np.asarray(mae0))
         return [(mae[i][:ks[i]], b_int[i][:ks[i]], mae0[i][:ks[i]])
@@ -420,6 +426,9 @@ class JaxSearchBackend(SearchBackend):
                     mae, b_int, mae0 = fn(
                         jnp.asarray(a), jnp.asarray(np.int64(ctx.b_fixed)),
                         x, f, f_q)
+                    # backend contract: one sync per fused chunk group
+                    # (bounded by BATCH_ELEMS), not per chunk.
+                    # analysis: allow(host-sync)
                     mae, b_int, mae0 = (np.asarray(mae), np.asarray(b_int),
                                         np.asarray(mae0))
                 out.extend((mae[i][:ks[i]], b_int[i][:ks[i]],

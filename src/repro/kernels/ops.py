@@ -113,12 +113,17 @@ def pack_table(table: PPATable) -> TableConsts:
 
     spec = get_naf(table.naf)
     coefs = np.concatenate([table.a_int, table.b_int[:, None]], axis=1)
-    # int32 datapath headroom: stage products must stay under 2**31
-    x_max = abs(int(table.interval[1] * (1 << table.cfg.w_in))) + 1
-    if int(np.abs(coefs).max(initial=1)) * x_max >= (1 << 31):
+    # int32 datapath headroom: exact per-segment abstract interpretation
+    # (repro.analysis.certify) replaces the seed-era |coef|max * x_max
+    # heuristic, which both under-detected (order>=2 concat-add / up-shift
+    # growth past the first product) and over-rejected (segment-local
+    # coefficient/input ranges are far tighter than the global product).
+    from repro.analysis.certify import certify_table
+    cert = certify_table(table)
+    if not cert.ok:
         raise ValueError(
-            f"table {table.naf} overflows the int32 datapath "
-            f"(|coef|max={np.abs(coefs).max()}, x_max={x_max})")
+            f"table {table.naf} overflows the int32 datapath: "
+            + "; ".join(v.describe() for v in cert.violations))
 
     # LUT deployment modes: the whole fixed-point input domain is small
     # (<= span * 2^w_in entries), so both the segment index and the full
