@@ -1,9 +1,12 @@
-"""Paper Table III: piecewise-quadratic — FQA-O2 vs QPA-G2."""
+"""Paper Table III: piecewise-quadratic — FQA-O2 vs QPA-G2, plus the
+non-uniform breakpoint column (see table2_pwl_compare.nonuniform_column:
+same acceptance assertion — >= 2 rows reduced at equal-or-better MAE)."""
 
 from __future__ import annotations
 
 from repro.core import FWLConfig, PPAScheme, compile_ppa_table
 from benchmarks.common import emit, timeit
+from benchmarks.table2_pwl_compare import nonuniform_column
 
 F, S = FWLConfig, PPAScheme
 
@@ -29,6 +32,7 @@ def main() -> None:
              mae=f"{tab.mae_hard:.3e}",
              match=("exact" if tab.num_segments == paper else
                     f"{(tab.num_segments - paper) / paper:+.1%}"))
+    nonuniform_column("table3", ROWS)
 
 
 if __name__ == "__main__":

@@ -53,6 +53,20 @@
 #                         gets an exact per-segment bit-width certificate —
 #                         overflow-freedom proven, or CI fails with the
 #                         concrete violating interval
+#   scripts/ci.sh seg-smoke
+#                         segmentation tier: the property suite for the
+#                         whole segmentation stack (breakpoint
+#                         monotonicity, exact domain tiling, per-segment
+#                         MAE_t feasibility, cross-segmenter agreement
+#                         with non-monotone witnesses, memoized == plain
+#                         for the non-uniform search), then a fresh
+#                         uniform-vs-non-uniform compile pair whose
+#                         non-uniform table must not grow the segment
+#                         count, must hold MAE_t and must certify
+#                         overflow-free.  The property suite also runs
+#                         inside tier-1 (it is part of the default
+#                         pytest gate); this mode is the quick,
+#                         segmentation-only slice of it
 #   scripts/ci.sh docs-check
 #                         every python snippet in docs/*.md parses and
 #                         its imports resolve; intra-repo doc links are
@@ -97,6 +111,29 @@ case "$mode" in
     python -m repro.analysis --lint "$@" || exit 1
     exec python -m repro.analysis --certify-grid --smoke
     ;;
+  seg-smoke)
+    python -m pytest -q tests/test_core_segmentation.py "$@" || exit 1
+    exec python - <<'PY'
+import dataclasses
+from repro.analysis import certify_table
+from repro.core import FWLConfig, PPAScheme, compile_ppa_table
+
+cfg = FWLConfig(7, 7, (7,), (7,), 7)
+uni = PPAScheme(1, None, "fqa_fast")
+non = dataclasses.replace(uni, segmenter="nonuniform")
+t_u = compile_ppa_table("sigmoid", cfg, uni)
+t_n = compile_ppa_table("sigmoid", cfg, non)
+assert t_n.num_segments <= t_u.num_segments, \
+    f"non-uniform grew the table: {t_u.num_segments} -> {t_n.num_segments}"
+assert t_n.mae_hard <= t_n.mae_t + 1e-12, "non-uniform table misses MAE_t"
+cert = certify_table(t_n)
+assert cert.ok, f"non-uniform table failed certification: {cert.violations}"
+print(f"seg-smoke: ok (uniform {t_u.num_segments} -> "
+      f"non-uniform {t_n.num_segments} segments, "
+      f"mae {t_n.mae_hard:.3e} <= {t_n.mae_t:.3e}, certified <= "
+      f"{cert.max_bits} bits)")
+PY
+    ;;
   docs-check)
     exec python scripts/docs_check.py "$@"
     ;;
@@ -109,7 +146,7 @@ case "$mode" in
     ;;
   *)
     echo "usage: scripts/ci.sh" \
-         "[tier1|fast|bench-smoke|sweep-smoke|search-smoke|serve-smoke|tune-smoke|analyze|docs-check]" \
+         "[tier1|fast|bench-smoke|sweep-smoke|search-smoke|serve-smoke|tune-smoke|analyze|seg-smoke|docs-check]" \
          "[extra args...]" >&2
     exit 2
     ;;

@@ -28,7 +28,8 @@ from repro.core.quantize import Quantizer, make_quantizer
 from repro.core.schemes import PPAScheme, PPATable, eval_table_int
 from repro.core.searchspace import SearchBackend, resolve_backend
 from repro.core.segmentation import (bisection_segment, estimate_tseg,
-                                     sequential_segment, tbw_segment)
+                                     nonuniform_segment, sequential_segment,
+                                     tbw_segment)
 
 from .memo import MemoizedSegmentEvaluator
 
@@ -227,11 +228,17 @@ def compile_table(
                            mae_t)
     before = _snapshot(ev)
 
+    seg_report: Dict[str, int] = {}
     if scheme.segmenter == "tbw":
         if tseg is None:
             tseg = session.tseg_for(spec, interval, cfg, mae_t)
         segments = tbw_segment(ev, tseg, final_mode=final_mode,
                                speculate=speculate)
+    elif scheme.segmenter == "nonuniform":
+        if tseg is None:
+            tseg = session.tseg_for(spec, interval, cfg, mae_t)
+        segments = nonuniform_segment(ev, tseg, final_mode=final_mode,
+                                      speculate=speculate, report=seg_report)
     elif scheme.segmenter == "bisection":
         segments = bisection_segment(ev, final_mode=final_mode)
     elif scheme.segmenter == "sequential":
@@ -266,7 +273,12 @@ def compile_table(
             "warm_hits": delta["warm_hits"],
             "spec_windows": delta["spec_windows"],
             "tseg": float(tseg or 0),
+            # non-uniform search outcome (empty for the other segmenters):
+            # deterministic facts about the artifact, identical across
+            # search backends / memoization / speculation settings.
+            **{k: float(v) for k, v in seg_report.items()},
         })
+    table.validate()
     # cross-check: golden re-evaluation of the packed table
     y = eval_table_int(table, x_int)
     re_mae = float(np.abs(f_vals - y / (1 << cfg.w_out)).max())

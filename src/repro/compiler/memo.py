@@ -74,6 +74,14 @@ from repro.core.segmentation import SegmentEvaluator
 __all__ = ["MemoizedSegmentEvaluator"]
 
 
+def _quant_mode(mode: str) -> str:
+    """The quantizer-facing mode for an evaluator request: ``probe`` is a
+    feasibility question asked *without* the monotone-containment prior
+    (see :meth:`MemoizedSegmentEvaluator.lower_bound`), but the scan it
+    triggers is an ordinary feasible scan."""
+    return "feasible" if mode == "probe" else mode
+
+
 @dataclasses.dataclass
 class _Entry:
     fit: SegmentFit
@@ -175,15 +183,26 @@ class MemoizedSegmentEvaluator(SegmentEvaluator):
             if maes[j] < maes[j - 1]:
                 maes[j] = maes[j - 1]
 
-    def lower_bound(self, start: int, end: int) -> float:
+    def lower_bound(self, start: int, end: int,
+                    frontier: bool = True) -> float:
         """Lower bound on the best achievable MAE of [start, end]: the
-        window's quantization floor, and the best MAE of any *same-start*
-        prefix window already scanned completely (see module docstring for
-        why other starts are excluded)."""
+        window's quantization floor, and — when ``frontier`` — the best MAE
+        of any *same-start* prefix window already scanned completely (see
+        module docstring for why other starts are excluded).
+
+        The frontier term assumes extending a window rightward can only
+        grow its best achievable MAE.  That holds only approximately for
+        quantized candidate spaces (each window's space is re-centered on
+        its own Remez fit), which is exactly the slack the non-uniform
+        segmenter's jump probes exploit — ``mode="probe"`` requests
+        therefore ask for this bound with ``frontier=False``, keeping only
+        the unconditionally sound quantization floor."""
         lb = float(self._qerr[start: end + 1].max())
-        frontier = self._frontier.get(start)
-        if frontier is not None:
-            ends, maes = frontier
+        if not frontier:
+            return lb
+        fr = self._frontier.get(start)
+        if fr is not None:
+            ends, maes = fr
             i = bisect.bisect_right(ends, end) - 1
             if i >= 0 and maes[i] > lb:
                 lb = maes[i]
@@ -196,11 +215,12 @@ class MemoizedSegmentEvaluator(SegmentEvaluator):
         filter, so speculation can never drift from the cache policy."""
         ent = self._cache.get((start, end))
         if ent is not None and mode != "full":
-            if ent.complete or (mode == "feasible"
+            if ent.complete or (mode in ("feasible", "probe")
                                 and ent.fit.mae <= self.mae_t + _EPS):
                 return "hit", self._at_target(ent.fit)
-        if mode == "feasible":
-            lb = self.lower_bound(start, end)
+        if mode in ("feasible", "probe"):
+            lb = self.lower_bound(start, end,
+                                  frontier=(mode == "feasible"))
             if lb > self.mae_t + _EPS:
                 return "pruned", SegmentFit(
                     ok=False, mae=float(lb),
@@ -223,11 +243,12 @@ class MemoizedSegmentEvaluator(SegmentEvaluator):
             return fit
 
         key = (start, end)
-        warm = self._warm.get(start) if mode == "feasible" else None
+        warm = self._warm.get(start) if mode in ("feasible", "probe") \
+            else None
         a_real, b_real = self._areal.get(key, (None, None))
         fit = self.quantizer.fit_segment(
             self.x_int[start: end + 1], self.f_vals[start: end + 1],
-            self.cfg, self.mae_t, mode=mode, a_warm=warm,
+            self.cfg, self.mae_t, mode=_quant_mode(mode), a_warm=warm,
             a_real=a_real, b_real=b_real)
         self._record(start, end, fit, mode)
         return fit
@@ -252,7 +273,8 @@ class MemoizedSegmentEvaluator(SegmentEvaluator):
             if not fit.warm_hit:
                 self._cross_seeded.discard(start)
         # a feasible-mode scan that found nothing is exhaustive -> complete
-        complete = mode != "feasible" or not fit.ok
+        # (probe mode runs the same feasible scan, just unpruned)
+        complete = mode not in ("feasible", "probe") or not fit.ok
         ent = self._cache.get((start, end))
         if ent is None or complete:
             self._cache[(start, end)] = _Entry(fit, complete)
@@ -348,11 +370,12 @@ class MemoizedSegmentEvaluator(SegmentEvaluator):
         start, end = windows[0]
         if self._needs_fit(start, end, mode):
             self.spec_windows += 1
-            warm = self._warm.get(start) if mode == "feasible" else None
+            warm = self._warm.get(start) if mode in ("feasible", "probe") \
+                else None
             a_real, b_real = self._areal.get((start, end), (None, None))
             fit = self.quantizer.fit_segment(
                 self.x_int[start: end + 1], self.f_vals[start: end + 1],
-                self.cfg, self.mae_t, mode=mode, a_warm=warm,
+                self.cfg, self.mae_t, mode=_quant_mode(mode), a_warm=warm,
                 a_real=a_real, b_real=b_real)
             self._record(start, end, fit, mode)
         # phase 2 — successor windows, re-filtered now that the primary's
@@ -376,13 +399,14 @@ class MemoizedSegmentEvaluator(SegmentEvaluator):
             if not self._needs_fit(s, e, mode):
                 continue
             todo.append((s, e))
-            warms.append(self._warm.get(s) if mode == "feasible" else None)
+            warms.append(self._warm.get(s)
+                         if mode in ("feasible", "probe") else None)
         if not todo:
             return
         self.spec_windows += len(todo)
         fits = self.quantizer.fit_segments(
             [(self.x_int[s: e + 1], self.f_vals[s: e + 1]) for s, e in todo],
-            self.cfg, self.mae_t, mode=mode, warms=warms,
+            self.cfg, self.mae_t, mode=_quant_mode(mode), warms=warms,
             max_chunks=[self.SPEC_CHUNK_BUDGET] * len(todo),
             a_reals=[self._areal[w][0] for w in todo],
             b_reals=[self._areal[w][1] for w in todo])

@@ -21,7 +21,8 @@ from .searchspace import (SEARCH_BACKENDS, JaxSearchBackend,
 from .schemes import (PPAScheme, PPATable, compile_ppa_table, eval_table_int,
                       table_mae_report)
 from .segmentation import (Segment, SegmentEvaluator, bisection_segment,
-                           estimate_tseg, sequential_segment, tbw_segment)
+                           estimate_tseg, nonuniform_segment,
+                           sequential_segment, tbw_segment)
 from .workflow import WorkflowResult, hardware_constrained_ppa
 
 __all__ = [
@@ -41,6 +42,6 @@ __all__ = [
     "PPAScheme", "PPATable", "compile_ppa_table", "eval_table_int",
     "table_mae_report",
     "Segment", "SegmentEvaluator", "bisection_segment", "estimate_tseg",
-    "sequential_segment", "tbw_segment",
+    "nonuniform_segment", "sequential_segment", "tbw_segment",
     "WorkflowResult", "hardware_constrained_ppa",
 ]

@@ -27,7 +27,8 @@ from .datapath import FWLConfig
 from .schemes import PPATable
 
 __all__ = ["HWCost", "cost_features", "estimate_cost", "CALIBRATION",
-           "calibrate", "PAPER_TABLE6", "PAPER_TABLE7"]
+           "calibrate", "breakpoint_rom_bits", "PAPER_TABLE6",
+           "PAPER_TABLE7"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -49,6 +50,22 @@ def _bits_x(w_in: int) -> int:
 
 def _bits_o(w_o: int) -> int:
     return w_o + 2
+
+
+def breakpoint_rom_bits(table: PPATable) -> int:
+    """Stored breakpoint bits for the index generator.
+
+    The uniform-window searchers (tbw / bisection / sequential) keep the
+    paper's index-generator model unchanged: their thresholds follow from
+    the uniform probe stride, so the comparator term alone prices the
+    index (and the Table VI/VII calibration stays bit-stable).  The
+    non-uniform searcher places breakpoints freely — its (s-1) comparator
+    thresholds must be *stored*, one ``w_in+1``-bit word each, replacing
+    the implicit-uniform index.  That ROM is what buys the segment-count
+    reduction; pricing it keeps the frontier comparison honest."""
+    if table.scheme.segmenter != "nonuniform":
+        return 0
+    return (table.num_segments - 1) * _bits_x(table.cfg.w_in)
 
 
 def cost_features(table: PPATable, cert=None) -> np.ndarray:
@@ -90,9 +107,10 @@ def cost_features(table: PPATable, cert=None) -> np.ndarray:
     adder_bits += nb.get("sum", min(cur, cfg.w_b) + 2)
 
     cmp_bits = (s - 1) * _bits_x(cfg.w_in)
-    # coefficient LUT: shared rows only (paper's coefficient-unification)
+    # coefficient LUT: shared rows only (paper's coefficient-unification),
+    # plus the explicit breakpoint ROM for non-uniform tables
     row_bits = sum(_bits_a(w) for w in cfg.w_a) + (cfg.w_b + 2)
-    lut_bits = table.unique_lut_rows() * row_bits
+    lut_bits = table.unique_lut_rows() * row_bits + breakpoint_rom_bits(table)
 
     return np.array([mult_fa, adder_bits, cmp_bits, lut_bits, shift_mux, 1.0])
 
@@ -224,5 +242,6 @@ def estimate_cost(table: PPATable, cert=None) -> HWCost:
     delay = float(df @ CALIBRATION["delay"])
     row_bits = sum(_bits_a(w) for w in cfg.w_a) + (cfg.w_b + 2)
     return HWCost(area_um2=area, power_mw=power, delay_ns=delay,
-                  lut_bits=table.unique_lut_rows() * row_bits,
+                  lut_bits=(table.unique_lut_rows() * row_bits
+                            + breakpoint_rom_bits(table)),
                   features=tuple(f))

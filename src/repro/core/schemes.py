@@ -33,13 +33,19 @@ class PPAScheme:
     m_shifters: Optional[int] = None
     quantizer: str = "fqa"           # fqa | fqa_fast | qpa | plac | mlplac
     weight: str = "hamming"          # hamming | csd (Sm constraint metric)
-    segmenter: str = "tbw"           # tbw | bisection | sequential
+    segmenter: str = "tbw"           # tbw | nonuniform | bisection | sequential
 
     @property
     def tag(self) -> str:
         base = (f"S{self.m_shifters}-O{self.order}" if self.m_shifters
                 else f"O{self.order}")
-        return f"{self.quantizer.upper()}-{base}"
+        tag = f"{self.quantizer.upper()}-{base}"
+        # non-uniform breakpoint tables are a different hardware artifact
+        # (explicit breakpoint ROM) — surface it in the human-facing tag;
+        # the store key hashes the full scheme either way.
+        if self.segmenter == "nonuniform":
+            tag += "-NU"
+        return tag
 
     def build_quantizer(self, backend=None, lookahead: int = 0) -> Quantizer:
         """``backend`` picks the searchspace execution backend (name or
@@ -79,6 +85,23 @@ class PPATable:
     def order(self) -> int:
         return int(self.a_int.shape[1])
 
+    def validate(self) -> "PPATable":
+        """Structural invariants every consumer relies on: one coefficient
+        row per segment and *strictly* increasing breakpoint starts — the
+        searchsorted index generator and the kernels' comparator sweep both
+        assume it, for uniform and non-uniform layouts alike."""
+        s = self.num_segments
+        if s == 0:
+            raise ValueError(f"table {self.naf}: no segments")
+        if self.a_int.shape[0] != s or self.b_int.shape[0] != s:
+            raise ValueError(
+                f"table {self.naf}: coefficient rows ({self.a_int.shape[0]}"
+                f"/{self.b_int.shape[0]}) do not match {s} segments")
+        if s > 1 and not bool(np.all(np.diff(self.starts_int) > 0)):
+            raise ValueError(
+                f"table {self.naf}: starts_int must be strictly increasing")
+        return self
+
     def unique_lut_rows(self) -> int:
         """LUT entries after coefficient sharing across segments."""
         rows = {tuple(r) for r in
@@ -111,7 +134,8 @@ class PPATable:
             starts_int=np.asarray(d["starts_int"], dtype=np.int64),
             a_int=np.asarray(d["a_int"], dtype=np.int64),
             b_int=np.asarray(d["b_int"], dtype=np.int64),
-            mae_hard=d["mae_hard"], mae_t=d["mae_t"], stats=d["stats"])
+            mae_hard=d["mae_hard"], mae_t=d["mae_t"],
+            stats=d["stats"]).validate()
 
     def save(self, path: str | Path) -> None:
         Path(path).write_text(self.to_json())

@@ -6,6 +6,7 @@ it is installed and with a seeded-random sweep otherwise, so the property
 gate never silently disappears with the optional dependency.
 """
 
+import dataclasses
 import json
 from pathlib import Path
 
@@ -25,6 +26,7 @@ REPO_ROOT = Path(__file__).resolve().parents[1]
 
 CFG7 = FWLConfig(w_in=7, w_out=7, w_a=(7,), w_o=(7,), w_b=7)
 SCHEME7 = PPAScheme(order=1, m_shifters=None, quantizer="fqa_fast")
+NU_SCHEME7 = dataclasses.replace(SCHEME7, segmenter="nonuniform")
 
 
 def _random_cfg(rng):
@@ -168,10 +170,9 @@ def test_certify_table_proves_smoke_config(sigmoid_table):
     assert cert.max_bits <= 32
 
 
-def test_certified_bounds_contain_every_grid_point(sigmoid_table):
+def _assert_full_grid_containment(tab):
     """Full-grid containment: the per-table certificate bounds hold for
     every representable input, per the table's own segment selection."""
-    tab = sigmoid_table
     cfg = tab.cfg
     lo = int(np.ceil(tab.interval[0] * (1 << cfg.w_in) - 1e-12))
     hi = int(np.ceil(tab.interval[1] * (1 << cfg.w_in) - 1e-12))
@@ -184,6 +185,10 @@ def test_certified_bounds_contain_every_grid_point(sigmoid_table):
                                 int(tab.b_int[s]), x)
         for name, v in trace.items():
             assert joined[name]["lo"] <= v <= joined[name]["hi"]
+
+
+def test_certified_bounds_contain_every_grid_point(sigmoid_table):
+    _assert_full_grid_containment(sigmoid_table)
 
 
 def test_certify_config_envelope_records_assumptions():
@@ -210,6 +215,56 @@ def test_join_bounds_is_hull():
     for name in nb:
         assert j[name].lo == min(nb[name].lo, nb2[name].lo)
         assert j[name].hi == max(nb[name].hi, nb2[name].hi)
+
+
+# --- non-uniform tables: certificate soundness + lifecycle -------------------
+
+@pytest.fixture(scope="module")
+def sigmoid_nu_table(tmp_path_factory):
+    store = TableStore(tmp_path_factory.mktemp("nucertstore"))
+    return store.compile_or_load("sigmoid", CFG7, NU_SCHEME7)
+
+
+def test_certify_nonuniform_table_proves_overflow_freedom(sigmoid_nu_table):
+    tab = sigmoid_nu_table
+    assert tab.scheme.segmenter == "nonuniform"
+    cert = certify_table(tab)
+    assert cert.ok and not cert.violations
+    assert cert.mode == "table" and cert.max_bits <= 32
+
+
+def test_certified_bounds_contain_every_grid_point_nonuniform(
+        sigmoid_nu_table):
+    """The certifier joins per-segment boxes over the table's *actual*
+    breakpoints, so the proof stays sound under non-uniform layouts."""
+    _assert_full_grid_containment(sigmoid_nu_table)
+
+
+def test_cert_retired_when_segmentation_mode_changes(tmp_path):
+    """Uniform and non-uniform certificates live under distinct keys; a
+    certificate stamped for one segmentation mode never serves the other —
+    the stale-stamp retirement fires on first serve."""
+    store = TableStore(tmp_path)
+    job_u = CompileJob("sigmoid", CFG7, SCHEME7)
+    job_n = CompileJob("sigmoid", CFG7, NU_SCHEME7)
+    assert job_u.key() != job_n.key()
+    assert store.cert_path(job_u) != store.cert_path(job_n)
+    store.certify(job_u)
+    store.compile_or_load(job_n.naf, job_n.cfg, job_n.scheme)
+    # emulate a segmentation-mode mixup: the uniform certificate lands in
+    # the non-uniform certificate slot (its key stamp cannot match)
+    path_n = store.cert_path(job_n)
+    path_n.write_text(store.cert_path(job_u).read_text())
+    fresh = TableStore(tmp_path)          # new process's view of the dir
+    assert fresh.load_certificate(job_n) is None
+    fresh.compile_or_load(job_n.naf, job_n.cfg, job_n.scheme)
+    assert not path_n.exists()            # retired on first serve
+    assert fresh.stats()["certs_stale"] >= 1
+    assert store.cert_path(job_u).exists()   # the honest one survives
+    # re-certifying under the right key makes the certificate loadable
+    cert = fresh.certify(job_n)
+    assert cert.ok
+    assert fresh.load_certificate(job_n) is not None
 
 
 # --- store lifecycle ---------------------------------------------------------

@@ -14,6 +14,8 @@ bit-identical.
   for the softmax kernel that silently dropped the half-ULP add.
 """
 
+import dataclasses
+
 import numpy as np
 import jax.numpy as jnp
 import pytest
@@ -38,22 +40,34 @@ ALL_BACKENDS = INT_BACKENDS + ["pallas_fused_interpret"]
 
 _TABLES = {}
 
+# segmentation modes the parity sweeps run under: the kernel contract is
+# layout-agnostic (explicit starts_int), so non-uniform tables must be as
+# bit-identical across backends as the uniform ones
+SEG_MODES = ["uniform", "nonuniform"]
 
-def _table(naf: str, bits: int):
-    key = (naf, bits)
+
+def _table(naf: str, bits: int, seg: str = "uniform"):
+    key = (naf, bits, seg)
     if key not in _TABLES:
         cfg, scheme = ((CFG16, SCHEME16) if bits == 16 else (CFG8, SCHEME8))
+        if seg == "nonuniform":
+            scheme = dataclasses.replace(scheme, segmenter="nonuniform")
         _TABLES[key] = compile_or_load(naf, cfg, scheme)
     return _TABLES[key]
 
 
 # ---------------------------------------------------------------- int parity
+@pytest.mark.parametrize("seg", SEG_MODES)
 @pytest.mark.parametrize("bits", [16, 8])
 @pytest.mark.parametrize("naf", ZOO)
-def test_integer_datapath_parity(naf, bits):
+def test_integer_datapath_parity(naf, bits, seg):
     """Every integer backend == eval_table_int, exactly, on the whole
-    fixed-point input domain."""
-    tab = _table(naf, bits)
+    fixed-point input domain — for uniform- and non-uniform-searched
+    tables alike."""
+    tab = _table(naf, bits, seg)
+    if seg == "nonuniform":
+        assert tab.scheme.segmenter == "nonuniform"
+        assert tab.scheme.tag.endswith("-NU")
     tc = pack_table(tab)
     grid = np.arange(tc.lo, tc.hi, dtype=np.int64)
     gold = eval_table_int(tab, grid)
@@ -65,12 +79,13 @@ def test_integer_datapath_parity(naf, bits):
 
 
 # -------------------------------------------------------------- float parity
+@pytest.mark.parametrize("seg", SEG_MODES)
 @pytest.mark.parametrize("bits", [16, 8])
 @pytest.mark.parametrize("naf", ZOO)
-def test_float_path_parity(naf, bits):
+def test_float_path_parity(naf, bits, seg):
     """ppa_apply is float-bit-identical across every backend (including the
     fused kernel) on in-interval, out-of-interval and negative inputs."""
-    tab = _table(naf, bits)
+    tab = _table(naf, bits, seg)
     tc = pack_table(tab)
     xs, xe = tc.interval
     rng = np.random.default_rng(hash((naf, bits)) & 0xFFFF)
@@ -83,12 +98,13 @@ def test_float_path_parity(naf, bits):
             got, ref, err_msg=f"backend {be} diverges for {naf}@{bits}bit")
 
 
+@pytest.mark.parametrize("seg", SEG_MODES)
 @pytest.mark.parametrize("bits", [16, 8])
 @pytest.mark.parametrize("naf", ["sigmoid_wide", "gelu_inner"])
-def test_gated_path_parity(naf, bits):
+def test_gated_path_parity(naf, bits, seg):
     """The gated op (silu = x*sigmoid(x), gelu = x*Phi(x)) is bit-identical
     whether the multiply runs inside the fused kernel or outside."""
-    tc = pack_table(_table(naf, bits))
+    tc = pack_table(_table(naf, bits, seg))
     rng = np.random.default_rng(11)
     x = jnp.asarray(rng.normal(0, 3, size=(5, 131)), jnp.float32)
     ref = np.asarray(ppa_gate(tc, x, backend="ref"))

@@ -1,6 +1,9 @@
 """repro.compiler subsystem: artifact round-trips, store hit/miss
-semantics, memoized-evaluator equivalence + reuse, batch driver, and the
-PPATable -> Pallas kernel adapter parity."""
+semantics, memoized-evaluator equivalence + reuse, batch driver, the
+non-uniform segmenter's store addressing, and the PPATable -> Pallas
+kernel adapter parity."""
+
+import dataclasses
 
 import numpy as np
 import pytest
@@ -162,6 +165,92 @@ def test_estimate_tseg_shared_helper_fallback():
     ev0 = SegmentEvaluator(x, f, CFG, make_quantizer("plac"), 0.0)
     tseg0, seg0 = estimate_tseg(ev0)
     assert seg0 == max(4, ev0.num // 8) and tseg0 >= 4
+
+
+# -- non-uniform segmenter: addressing, round-trip, validation ----------------
+NU_SCHEME = dataclasses.replace(SCHEME, segmenter="nonuniform")
+
+
+def test_nonuniform_scheme_distinct_key_and_tag():
+    """Uniform and non-uniform requests for the same (naf, cfg) must never
+    collide in the content-addressed store."""
+    j_u = CompileJob("sigmoid", CFG, SCHEME)
+    j_n = CompileJob("sigmoid", CFG, NU_SCHEME)
+    assert j_u.key() != j_n.key()
+    assert NU_SCHEME.tag.endswith("-NU")
+    assert not SCHEME.tag.endswith("-NU")
+
+
+def test_store_keeps_both_segmenters_side_by_side(tmp_path):
+    store = TableStore(tmp_path)
+    u = store.compile_or_load("sigmoid", CFG, SCHEME)
+    n = store.compile_or_load("sigmoid", CFG, NU_SCHEME)
+    assert store.misses == 2               # distinct keys, two compiles
+    assert n.scheme.segmenter == "nonuniform"
+    assert u.scheme.segmenter != "nonuniform"
+    arts = [p for p in tmp_path.glob("*.json")
+            if not p.name.endswith(".cert.json")]
+    assert len(arts) == 2
+    # the non-uniform search records its outer-loop facts in the artifact
+    assert n.stats["uniform_segments"] >= n.num_segments
+    assert "uniform_segments" not in u.stats
+    # serving either again is a pure hit for its own key
+    s_u, s_n = CompilerSession(), CompilerSession()
+    u2 = store.compile_or_load("sigmoid", CFG, SCHEME, session=s_u)
+    n2 = store.compile_or_load("sigmoid", CFG, NU_SCHEME, session=s_n)
+    assert s_u.counters()["calls"] == 0 and s_n.counters()["calls"] == 0
+    assert _tables_equal(u, u2) and _tables_equal(n, n2)
+
+
+def test_nonuniform_disk_roundtrip_byte_identical(tmp_path):
+    store = TableStore(tmp_path)
+    n = store.compile_or_load("sigmoid", CFG, NU_SCHEME)
+    fresh = TableStore(tmp_path)          # new process's view of the dir
+    sess = CompilerSession()
+    n2 = fresh.compile_or_load("sigmoid", CFG, NU_SCHEME, session=sess)
+    assert fresh.hits_disk == 1 and sess.counters()["calls"] == 0
+    assert _tables_equal(n, n2)
+    assert n2.to_json() == n.to_json()    # byte-identical through the disk
+    assert n2.stats == n.stats
+
+
+def test_merge_and_version_sweep_handle_nonuniform(tmp_path):
+    shard = TableStore(tmp_path / "shard")
+    shard.compile_or_load("sigmoid", CFG, NU_SCHEME)
+    target = TableStore(tmp_path / "target")
+    target.compile_or_load("sigmoid", CFG, SCHEME)
+    stats = target.merge(tmp_path / "shard")
+    assert stats["imported"] == 1 and stats["skipped_version"] == 0
+    # the imported artifact serves the non-uniform key without a compile
+    sess = CompilerSession()
+    tab = target.compile_or_load("sigmoid", CFG, NU_SCHEME, session=sess)
+    assert sess.counters()["calls"] == 0
+    assert tab.scheme.segmenter == "nonuniform"
+    # current-version artifacts (either segmenter) survive the sweep
+    assert target.version_sweep() == []
+
+
+def test_table_validate_rejects_malformed_breakpoints(small_table):
+    import json
+    from repro.kernels import pack_table
+    # non-strictly-increasing starts: from_json and pack_table both refuse
+    blob = json.loads(small_table.to_json())
+    if len(blob["starts_int"]) < 2:
+        pytest.skip("needs >= 2 segments")
+    blob["starts_int"][1] = blob["starts_int"][0]
+    with pytest.raises(ValueError, match="strictly increasing"):
+        PPATable.from_json(json.dumps(blob))
+    broken = dataclasses.replace(
+        small_table,
+        starts_int=np.repeat(small_table.starts_int[:1],
+                             small_table.num_segments))
+    with pytest.raises(ValueError, match="strictly increasing"):
+        pack_table(broken)
+    # mismatched coefficient rows
+    blob2 = json.loads(small_table.to_json())
+    blob2["a_int"] = blob2["a_int"][:-1]
+    with pytest.raises(ValueError):
+        PPATable.from_json(json.dumps(blob2))
 
 
 # -- kernel adapter ------------------------------------------------------------

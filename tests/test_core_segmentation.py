@@ -6,17 +6,19 @@ import pytest
 from repro.core import (FWLConfig, PPAScheme, compile_ppa_table, get_naf,
                         grid_for_interval, make_quantizer)
 from repro.core.segmentation import (SegmentEvaluator, bisection_segment,
-                                     sequential_segment, tbw_segment)
+                                     nonuniform_segment, sequential_segment,
+                                     tbw_segment)
+from repro.compiler.memo import MemoizedSegmentEvaluator
 
 
-def _make_ev(naf="sigmoid", quant="fqa", w=None, mae_t=None):
+def _make_ev(naf="sigmoid", quant="fqa", w=None, mae_t=None, cls=None):
     cfg = w or FWLConfig(8, 8, (7,), (8,), 8)
     spec = get_naf(naf)
     x = grid_for_interval(*spec.interval, cfg.w_in)
     f = spec(x / (1 << cfg.w_in))
     if mae_t is None:
         mae_t = 0.5 ** (cfg.w_out + 1)
-    return SegmentEvaluator(x, f, cfg, make_quantizer(quant), mae_t)
+    return (cls or SegmentEvaluator)(x, f, cfg, make_quantizer(quant), mae_t)
 
 
 def test_all_segmenters_agree_on_count():
@@ -85,3 +87,165 @@ def test_interval_arg_and_wide_domain():
     assert tab.interval == (0.0, 8.0)
     assert tab.num_segments > 1
     assert tab.mae_hard <= tab.mae_t + 1e-12
+
+
+# --- property harness: the invariants every segmenter must satisfy ----------
+#
+# The same checker runs over uniform (tbw/bisection/sequential) and
+# non-uniform segmentations, on a seeded-random sweep that always runs and
+# on hypothesis-driven draws when hypothesis is installed — the property
+# gate never silently disappears with the optional dependency.
+
+def _check_invariants(ev, segs):
+    """Breakpoints strictly monotone, windows exactly tile the quantized
+    interval, every per-segment fit is feasible at the evaluator's MAE_t.
+    Returns the worst per-segment MAE (the table's reported MAE)."""
+    assert segs, "empty segmentation"
+    assert segs[0].start == 0
+    assert segs[-1].end == ev.num - 1
+    for s in segs:
+        assert s.start <= s.end
+    for a, b in zip(segs, segs[1:]):
+        assert b.start == a.end + 1      # exact tiling, no gap/overlap
+    starts = [s.start for s in segs]
+    assert all(p < q for p, q in zip(starts, starts[1:]))
+    worst = 0.0
+    for s in segs:
+        assert s.fit.ok
+        assert s.fit.mae <= ev.mae_t + 1e-12
+        worst = max(worst, s.fit.mae)
+    return worst
+
+
+_SWEEP_NAFS = ["sigmoid", "tanh", "exp2_frac", "softplus"]
+_SWEEP_QUANTS = ["fqa_fast", "plac"]
+
+
+def _nonmonotone_witness(ev, a, b):
+    """Two greedy-maximal searches disagreed.  That is legal exactly when
+    window feasibility is non-monotone in the end point (quantized
+    candidate spaces are re-centered per window — the premise of the
+    non-uniform search): some end between the two chosen ends must be
+    infeasible even though the longer chosen end is feasible.  Returns
+    True iff such a witness exists."""
+    ka = [(s.start, s.end) for s in a]
+    kb = [(s.start, s.end) for s in b]
+    i = next(j for j, (p, q) in enumerate(zip(ka, kb)) if p != q)
+    (sa, ea), (sb, eb) = ka[i], kb[i]
+    assert sa == sb        # both tile from 0, so the first diff shares sp
+    lo, hi = min(ea, eb), max(ea, eb)   # hi is feasible: it was chosen
+    return any(not ev.evaluate(sa, p, mode="probe").ok
+               for p in range(lo + 1, hi))
+
+
+def _sweep_case(naf, quant, w_in, w_out, tseg, loose):
+    """Run every segmenter on one randomly drawn configuration and check
+    the cross-cutting invariants.  Skips (returns None) when MAE_t is
+    genuinely unachievable for the draw — but only if *all* segmenters
+    agree it is."""
+    cfg = FWLConfig(w_in, w_out, (w_out,), (w_out,), w_out)
+    mae_t = 0.5 ** (w_out + 1) * (4.0 if loose else 1.0)
+
+    def ev():
+        return _make_ev(naf=naf, quant=quant, w=cfg, mae_t=mae_t)
+
+    outcomes = {}
+    for name, fn in [("tbw", lambda e: tbw_segment(e, tseg)),
+                     ("bisection", bisection_segment),
+                     ("sequential", sequential_segment),
+                     ("nonuniform", lambda e: nonuniform_segment(e, tseg))]:
+        try:
+            outcomes[name] = fn(ev())
+        except RuntimeError:
+            outcomes[name] = None
+    feasible = {k: v is not None for k, v in outcomes.items()}
+    assert len(set(feasible.values())) == 1, \
+        f"segmenters disagree on feasibility: {feasible}"
+    if outcomes["tbw"] is None:
+        return None
+
+    for segs in outcomes.values():
+        _check_invariants(ev(), segs)
+    key = lambda segs: tuple((s.start, s.end) for s in segs)
+    # greedy-maximal uniform searches agree regardless of probe order —
+    # unless feasibility is non-monotone in the window end, in which case
+    # the disagreement must come with a concrete witness
+    for other in ("bisection", "sequential"):
+        if key(outcomes["tbw"]) != key(outcomes[other]):
+            assert _nonmonotone_witness(ev(), outcomes["tbw"],
+                                        outcomes[other]), \
+                f"tbw vs {other} disagree without a non-monotone witness"
+    # the non-uniform search is seeded from TBW and only merges segments
+    assert len(outcomes["nonuniform"]) <= len(outcomes["tbw"])
+    return outcomes
+
+
+def test_segmentation_invariants_seeded_sweep():
+    rng = np.random.default_rng(2026)
+    ran = 0
+    for _ in range(10):
+        naf = _SWEEP_NAFS[int(rng.integers(len(_SWEEP_NAFS)))]
+        quant = _SWEEP_QUANTS[int(rng.integers(len(_SWEEP_QUANTS)))]
+        w_in = int(rng.integers(5, 8))
+        w_out = int(rng.integers(5, 9))
+        tseg = int(rng.integers(1, 65))
+        loose = bool(rng.integers(0, 2))
+        if _sweep_case(naf, quant, w_in, w_out, tseg, loose) is not None:
+            ran += 1
+    assert ran >= 5      # the sweep must mostly hit feasible draws
+
+
+def test_nonuniform_tiles_and_reports():
+    report = {}
+    ev = _make_ev()
+    segs = nonuniform_segment(ev, 16, report=report)
+    _check_invariants(ev, segs)
+    assert report["uniform_segments"] >= len(segs)
+    assert report["jump_extensions"] >= 0
+    assert report["refine_moves"] >= 0
+
+
+def test_nonuniform_never_worse_than_tbw_across_tseg():
+    """The seed fixes the probe stride; whatever the stride, the jump
+    probes may only merge segments relative to that same seed."""
+    for tseg in (2, 8, 16, 64):
+        ev_u, ev_n = _make_ev(), _make_ev()
+        uni = tbw_segment(ev_u, tseg)
+        non = nonuniform_segment(ev_n, tseg)
+        _check_invariants(ev_n, non)
+        assert len(non) <= len(uni)
+
+
+def test_nonuniform_memoized_matches_plain():
+    """Probe mode answers from sound cache facts only, so the memoized
+    evaluator must reproduce the plain evaluator's segmentation exactly —
+    bounds and quantized coefficients."""
+    for quant in ("fqa_fast", "plac"):
+        plain = _make_ev(quant=quant)
+        memo = _make_ev(quant=quant, cls=MemoizedSegmentEvaluator)
+        sp = nonuniform_segment(plain, 16)
+        sm = nonuniform_segment(memo, 16, speculate=2)
+        assert [(s.start, s.end) for s in sp] == \
+            [(s.start, s.end) for s in sm]
+        assert [(s.fit.a_int, s.fit.b_int) for s in sp] == \
+            [(s.fit.a_int, s.fit.b_int) for s in sm]
+
+
+def test_nonuniform_unachievable_raises():
+    with pytest.raises(RuntimeError):
+        nonuniform_segment(_make_ev(mae_t=0.0), 16)
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=15, deadline=None)
+    @given(naf=st.sampled_from(_SWEEP_NAFS),
+           quant=st.sampled_from(_SWEEP_QUANTS),
+           w_in=st.integers(5, 7), w_out=st.integers(5, 8),
+           tseg=st.integers(1, 64), loose=st.booleans())
+    def test_segmentation_invariants_hypothesis(naf, quant, w_in, w_out,
+                                                tseg, loose):
+        _sweep_case(naf, quant, w_in, w_out, tseg, loose)
+except ImportError:      # seeded sweep above carries the property gate
+    pass
