@@ -1,0 +1,283 @@
+#!/usr/bin/env python
+"""Chaos harness: crash-inject the sweep/store/serve tiers, prove recovery.
+
+``scripts/ci.sh chaos-smoke`` runs ``--smoke``, which drives three legs:
+
+**Live-sweep leg** — the PR-4 work-stealing sweep under worker murder.
+A serial baseline compiles the smoke grid into one store; then three
+*crash workers* run the live sweep against a second (shared) store, each
+armed (via ``REPRO_FAILPOINTS`` in its environment) to die by
+``os._exit`` at a distinct point of the claim -> compile -> publish ->
+release pipeline:
+
+* ``compile.job:after=1:exit``        mid-compile (claim held, nothing
+  published — the takeover-and-recompile case)
+* ``sweep.wave.claimed:every=2:exit`` after the lease lands, before any
+  compile (a claim with no work behind it)
+* ``sweep.wave.published:once:exit``  after the durable publish, before
+  the release (a stored key under a dead lease)
+
+A survivor then drains the grid (stale-claim takeover via
+``claim_ttl_s``).  The harness asserts the grid is complete, every
+artifact byte-identical to the serial baseline, nothing was quarantined,
+and — via a ledger ``count`` arm on ``compile.job.done``, which fires
+only *after* a durable publish — that every key was compiled exactly
+once across all four processes.
+
+**Merge leg** — a merge worker dies mid-import (``store.merge.file``);
+a clean re-merge must finish the union with the same bytes.
+
+**Serve leg** — one tenant's warm-up is made to fail
+(``serve.tenant.warm``) and a request elsewhere expires its deadline;
+the healthy tenant's outputs must be token-bit-identical to a fault-free
+run, the degraded tenant's submits must reject (not hang), and the
+expired request must be reaped with partial state intact.
+
+Internal re-exec modes (used by the smoke driver, armed via env):
+``--worker`` runs one live-sweep worker; ``--merge-worker`` runs one
+store merge.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import subprocess
+import sys
+import tempfile
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "src"))
+
+from repro.compiler import TableStore                       # noqa: E402
+from repro.compiler.sweep import (compile_batch, paper_grid,  # noqa: E402
+                                  run_live)
+from repro.faults import arm, arm_spec, reset, set_ledger   # noqa: E402
+
+#: fixed smoke slice — every process re-derives the identical grid
+_NAFS = ("sigmoid", "tanh")
+_TTL = 2.0
+
+
+def _grid():
+    return paper_grid("smoke", nafs=_NAFS)
+
+
+def _worker_env(spec: str, ledger: Path) -> dict:
+    env = dict(os.environ)
+    env["REPRO_FAILPOINTS"] = f"{spec},compile.job.done:always:count"
+    env["REPRO_FAULTS_LEDGER"] = str(ledger)
+    env["PYTHONPATH"] = str(REPO / "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    return env
+
+
+def _run_worker(args) -> int:
+    jobs = _grid()
+    run_live(jobs, store=TableStore(args.store), processes=1,
+             claim_ttl_s=args.ttl, owner=args.owner,
+             drain=False, max_wait_s=0.5)
+    return 0
+
+
+def _run_merge_worker(args) -> int:
+    TableStore(args.dst).merge(args.src)
+    return 0
+
+
+# ------------------------------------------------------------ sweep leg
+def _sweep_leg(root: Path) -> None:
+    jobs = _grid()
+    print(f"chaos[sweep]: grid = {len(jobs)} jobs")
+    serial_dir, live_dir = root / "serial", root / "live"
+    ledger = root / "compiles.ledger"
+    compile_batch(jobs, store=TableStore(serial_dir), processes=1)
+
+    crashes = [
+        ("crash-midcompile", "compile.job:after=1:exit"),
+        ("crash-postclaim", "sweep.wave.claimed:every=2:exit"),
+        ("crash-postpublish", "sweep.wave.published:once:exit"),
+    ]
+    for owner, spec in crashes:
+        proc = subprocess.run(
+            [sys.executable, __file__, "--worker", "--store", str(live_dir),
+             "--owner", owner, "--ttl", str(_TTL)],
+            env=_worker_env(spec, ledger), cwd=REPO)
+        assert proc.returncode == 86, \
+            f"{owner} should die at its failpoint (exit 86), " \
+            f"got {proc.returncode} — the injected crash never fired"
+        print(f"chaos[sweep]: {owner} died as armed ({spec})")
+
+    # survivor: in-process, ledger-armed, takes over the dead leases
+    arm("compile.job.done", "always", action="count")
+    set_ledger(ledger)
+    try:
+        report = run_live(jobs, store=TableStore(live_dir), processes=1,
+                          claim_ttl_s=_TTL, owner="survivor")
+    finally:
+        reset()
+    assert not report.deferred, f"survivor left work behind: {report.deferred}"
+
+    live = TableStore(live_dir)
+    serial = TableStore(serial_dir)
+    stored_names = {}
+    for job in jobs:
+        j = job.resolved()
+        key = j.key()
+        assert live.contains(j), f"grid incomplete: {key} missing"
+        stored_names[key] = live._path(j, key).name
+    for key, name in stored_names.items():
+        a = (serial_dir / name).read_bytes()
+        b = (live_dir / name).read_bytes()
+        assert a == b, f"artifact {name} differs from the serial baseline"
+    assert not live.quarantine_dir.exists() or \
+        not any(live.quarantine_dir.iterdir()), "chaos run quarantined files"
+    # orphan leases on *stored* keys are harmless (a worker that died
+    # between publish and release); a lease on a missing key is not
+    for c in live_dir.glob("*.claim"):
+        assert c.name[:-len(".claim")] in stored_names, \
+            f"leftover claim on unstored key: {c.name}"
+
+    import json as _json
+    lines = [_json.loads(ln) for ln in
+             ledger.read_text().strip().splitlines()]
+    keys = [ln["key"] for ln in lines if ln["fp"] == "compile.job.done"]
+    assert len(keys) == len(set(keys)), \
+        f"a key compiled twice: {sorted(k for k in keys if keys.count(k) > 1)}"
+    assert set(keys) == set(stored_names), \
+        "ledger does not cover the grid exactly once: " \
+        f"missing={set(stored_names) - set(keys)} " \
+        f"extra={set(keys) - set(stored_names)}"
+    print(f"chaos[sweep]: ok — {len(jobs)} keys, 3 injected crashes, "
+          f"bit-identical to serial, exactly-once ledger")
+
+
+# ------------------------------------------------------------ merge leg
+def _merge_leg(root: Path) -> None:
+    jobs = _grid()
+    src, dst = root / "serial", root / "merged"
+    dst.mkdir(exist_ok=True)
+    proc = subprocess.run(
+        [sys.executable, __file__, "--merge-worker",
+         "--src", str(src), "--dst", str(dst)],
+        env=_worker_env("store.merge.file:after=2:exit", root / "m.ledger"),
+        cwd=REPO)
+    assert proc.returncode == 86, \
+        f"merge worker should die mid-merge, got {proc.returncode}"
+    stats = TableStore(dst).merge(src)    # clean retry finishes the union
+    n = stats["imported"] + stats["skipped_present"]
+    assert n == len({j.resolved().key() for j in jobs}), \
+        f"re-merge incomplete: {stats}"
+    for job in jobs:
+        j = job.resolved()
+        name = TableStore(dst)._path(j, j.key()).name
+        assert (dst / name).read_bytes() == (src / name).read_bytes(), \
+            f"merged artifact {name} differs from source"
+    print(f"chaos[merge]: ok — worker died after 2 files, "
+          f"clean re-merge finished the union ({stats})")
+
+
+# ------------------------------------------------------------ serve leg
+def _serve_leg(root: Path) -> None:
+    import dataclasses
+
+    import jax
+    import numpy as np
+
+    from repro.configs import get_smoke_config
+    from repro.models import init_params, param_specs
+    from repro.serve import Request, TenantFront, TenantSpec
+
+    cfg = dataclasses.replace(get_smoke_config("internlm2-1.8b"),
+                              act_impl="ppa")
+    params = init_params(param_specs(cfg), jax.random.PRNGKey(0))
+    store = TableStore(root / "serve_store")
+
+    def reqs(start_rid=0, deadline_s=None, n=3, max_new=3):
+        rng = np.random.default_rng(11)
+        return [Request(rid=start_rid + i,
+                        prompt=rng.integers(0, cfg.vocab, 8)
+                        .astype(np.int32),
+                        max_new_tokens=max_new, deadline_s=deadline_s)
+                for i in range(n)]
+
+    # fault-free baseline for tenant a
+    base = TenantFront(store)
+    base.add_tenant(TenantSpec(name="a", cfg=cfg, params=params,
+                               n_slots=2, cache_len=48))
+    base_reqs = reqs()
+    for r in base_reqs:
+        base.submit("a", r)
+    base.run_until_drained()
+    base_out = [r.output for r in base_reqs]
+
+    # fault run: b's warm-up dies, c loses a request to its deadline —
+    # a must not notice either
+    front = TenantFront(store)
+    arm("serve.tenant.warm", "once")
+    try:
+        rep = front.add_tenant(TenantSpec(name="b", cfg=cfg, params=params))
+    finally:
+        reset()
+    assert rep["degraded"], "injected warm-up failure did not degrade b"
+    front.add_tenant(TenantSpec(name="a", cfg=cfg, params=params,
+                                n_slots=2, cache_len=48))
+    front.add_tenant(TenantSpec(name="c", cfg=cfg, params=params,
+                                n_slots=1, cache_len=48))
+    bounced = reqs(start_rid=90, n=1)[0]
+    assert front.submit("b", bounced) is False
+    assert bounced.done and bounced.rejected == "tenant_degraded"
+    doomed = reqs(start_rid=80, deadline_s=1e-6, n=1, max_new=4)[0]
+    front.submit("c", doomed)
+    fault_reqs = reqs()
+    for r in fault_reqs:
+        front.submit("a", r)
+    front.run_until_drained()
+    assert doomed.timed_out and doomed.done, "deadline request not reaped"
+    assert [r.output for r in fault_reqs] == base_out, \
+        "healthy tenant's tokens drifted under neighbouring faults"
+    assert front.stats()["degraded"] == {"b": rep["degraded"]}
+    print("chaos[serve]: ok — tenant b degraded, deadline reaped on c, "
+          "tenant a token-bit-identical to the fault-free run")
+
+
+def _smoke(args) -> int:
+    root = Path(args.root) if args.root else Path(tempfile.mkdtemp(
+        prefix="chaos-smoke-"))
+    root.mkdir(parents=True, exist_ok=True)
+    print(f"chaos: scratch dir {root}")
+    _sweep_leg(root)
+    _merge_leg(root)
+    _serve_leg(root)
+    print("chaos: all legs ok")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    mode = ap.add_mutually_exclusive_group(required=True)
+    mode.add_argument("--smoke", action="store_true",
+                      help="run the full chaos smoke (CI entrypoint)")
+    mode.add_argument("--worker", action="store_true",
+                      help="internal: one live-sweep worker (armed via env)")
+    mode.add_argument("--merge-worker", action="store_true",
+                      help="internal: one store merge (armed via env)")
+    ap.add_argument("--root", default=None,
+                    help="scratch dir for --smoke (default: mkdtemp)")
+    ap.add_argument("--store", default=None, help="store dir (--worker)")
+    ap.add_argument("--owner", default=None, help="claim owner (--worker)")
+    ap.add_argument("--ttl", type=float, default=_TTL,
+                    help="claim takeover TTL seconds (--worker)")
+    ap.add_argument("--src", default=None, help="merge source dir")
+    ap.add_argument("--dst", default=None, help="merge target dir")
+    args = ap.parse_args(argv)
+    if args.worker:
+        return _run_worker(args)
+    if args.merge_worker:
+        return _run_merge_worker(args)
+    return _smoke(args)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

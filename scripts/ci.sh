@@ -67,6 +67,18 @@
 #                         inside tier-1 (it is part of the default
 #                         pytest gate); this mode is the quick,
 #                         segmentation-only slice of it
+#   scripts/ci.sh chaos-smoke
+#                         fault-injection tier: the failpoint/robustness
+#                         test file, then scripts/chaos.py --smoke — the
+#                         live sweep with three workers crash-injected at
+#                         distinct pipeline points (mid-compile, post-
+#                         claim, publish-before-release) must complete
+#                         the grid bit-identical to a serial compile
+#                         with an exactly-once compile ledger; a merge
+#                         killed mid-import must finish on clean retry;
+#                         and a tenant warm-up failure plus a deadline
+#                         expiry must leave a healthy tenant's tokens
+#                         bit-identical to a fault-free run
 #   scripts/ci.sh docs-check
 #                         every python snippet in docs/*.md parses and
 #                         its imports resolve; intra-repo doc links are
@@ -133,6 +145,10 @@ print(f"seg-smoke: ok (uniform {t_u.num_segments} -> "
       f"mae {t_n.mae_hard:.3e} <= {t_n.mae_t:.3e}, certified <= "
       f"{cert.max_bits} bits)")
 PY
+    ;;
+  chaos-smoke)
+    python -m pytest -q tests/test_faults.py "$@" || exit 1
+    exec python scripts/chaos.py --smoke
     ;;
   docs-check)
     exec python scripts/docs_check.py "$@"

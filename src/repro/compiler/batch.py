@@ -21,6 +21,7 @@ import os
 from typing import Dict, List, Optional, Sequence
 
 from repro.core.schemes import PPATable
+from repro.faults import failpoint
 
 from .store import CompileJob, TableStore, default_store
 
@@ -28,7 +29,12 @@ __all__ = ["compile_batch"]
 
 
 def _compile_job_json(job: CompileJob) -> str:
-    """Worker entrypoint (top-level so it pickles)."""
+    """Worker entrypoint (top-level so it pickles).
+
+    The ``compile.job`` failpoint fires at compile *start* (pool children
+    inherit ``REPRO_FAILPOINTS`` with their environment, so chaos arming
+    reaches them) — the mid-compile crash site."""
+    failpoint("compile.job", key=job.key())
     return job.compile().to_json()
 
 
@@ -68,11 +74,14 @@ def compile_batch(jobs: Sequence[CompileJob], *,
     if results is None:
         results = [_compile_job_json(jobs[i]) for i in uniq]
 
-    for idxs, js in zip(todo.values(), results):
+    for (key, idxs), js in zip(todo.items(), results):
         tab = PPATable.from_json(js)
         store.misses += 1
         store.compiles += 1
         store.put(jobs[idxs[0]], tab)
+        # fires only after the durable publish (the chaos ledger's
+        # exactly-once compile marker — see TableStore.compile_or_load)
+        failpoint("compile.job.done", key=key)
         for i in idxs:
             out[i] = tab
     return out  # type: ignore[return-value]

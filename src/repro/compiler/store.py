@@ -28,6 +28,7 @@ from typing import ClassVar, Dict, List, Optional, Tuple
 from repro.core.datapath import FWLConfig
 from repro.core.schemes import PPAScheme, PPATable
 from repro.core.searchspace import BACKEND_ENV, jax_backend_available
+from repro.faults import failpoint
 
 from .compile import (SPECULATE_ENV, CompilerSession, compile_table,
                       resolve_defaults)
@@ -44,6 +45,27 @@ _TMP_TICK = itertools.count()
 
 def _tmp_name(path: Path, kind: str = "tmp") -> Path:
     return path.with_suffix(f".{os.getpid()}.{next(_TMP_TICK)}.{kind}")
+
+
+# -- content checksums ---------------------------------------------------------
+# Every JSON the store publishes (artifact, certificate, shard manifest)
+# carries a "sha" field: a truncated sha256 over the canonical
+# (sort_keys) serialization of the blob WITHOUT that field.  Readers
+# verify it when present and treat a mismatch exactly like torn JSON —
+# quarantine (own store) or skip-and-report (foreign dirs).  Blobs with
+# no "sha" (pre-checksum artifacts, incl. the repo's committed tables)
+# still load: the stamp is tamper/truncation *detection*, not a gate.
+
+def _content_sha(blob: Dict) -> str:
+    body = {k: v for k, v in blob.items() if k != "sha"}
+    return hashlib.sha256(
+        json.dumps(body, sort_keys=True).encode()).hexdigest()[:16]
+
+
+def _sha_ok(blob) -> bool:
+    if not isinstance(blob, dict) or "sha" not in blob:
+        return True         # unstamped legacy blob: nothing to verify
+    return blob["sha"] == _content_sha(blob)
 
 
 def cache_dir() -> Path:
@@ -135,6 +157,13 @@ class TableStore:
     normal LRU life.
     """
 
+    #: transient-I/O read policy: a read that raises OSError or parses as
+    #: torn JSON is retried up to IO_RETRIES more times with linear
+    #: backoff before the store gives up on it (class attrs so tests and
+    #: operators can tune them store-wide).
+    IO_RETRIES: ClassVar[int] = 2
+    IO_BACKOFF_S: ClassVar[float] = 0.02
+
     def __init__(self, root: "Optional[str | Path]" = None,
                  *, persist: bool = True,
                  max_entries: Optional[int] = None):
@@ -154,6 +183,9 @@ class TableStore:
         self.certs_checked = 0  # certificate staleness checks performed
         self.certs_stale = 0    # stale certificates retired on load
         self._cert_seen: set = set()    # keys staleness-checked this process
+        self.io_retries = 0             # transient read errors retried
+        self.corrupt_quarantined = 0    # corrupt/torn files moved aside
+        self.quarantined: List[Tuple[str, str]] = []    # (name, reason)
 
     @property
     def root(self) -> Path:
@@ -164,6 +196,64 @@ class TableStore:
 
     def _path(self, job: CompileJob, key: str) -> Path:
         return self.root / f"{job.naf}-{job.scheme.tag}-{key}.json"
+
+    # -- torn/corrupt file handling --------------------------------------------
+    @property
+    def quarantine_dir(self) -> Path:
+        return self.root / "quarantine"
+
+    def _quarantine(self, path: Path, reason: str) -> None:
+        """Move a corrupt/torn file out of the store (never delete it: an
+        operator may want the bytes for forensics — see docs/OPERATIONS.md).
+        The quarantine dir is a subdirectory, so store globs (lookup,
+        merge, prune, version_sweep) never see quarantined files again."""
+        try:
+            self.quarantine_dir.mkdir(exist_ok=True)
+            os.replace(path, self.quarantine_dir /
+                       f"{path.name}.{os.getpid()}.{next(_TMP_TICK)}")
+        except OSError:
+            return      # raced with another process's quarantine/prune
+        self.corrupt_quarantined += 1
+        self.quarantined.append((path.name, reason))
+        # a certificate companion of a corrupt artifact proves nothing
+        cert = path.with_suffix(".cert.json")
+        if cert != path:
+            cert.unlink(missing_ok=True)
+
+    def _read_json(self, path: Path, *, what: str = "file"
+                   ) -> Optional[Dict]:
+        """Read+parse+checksum-verify a store JSON, with bounded retry.
+
+        Transient failures (``OSError``) and torn reads
+        (``JSONDecodeError`` / checksum mismatch) are retried
+        ``IO_RETRIES`` times with linear backoff; a file that stays torn
+        is **quarantined** and reported.  Returns the parsed blob or
+        None (missing / still unreadable / quarantined) — this method
+        never raises, which is what makes every read path crash-safe.
+        """
+        reason = None
+        for attempt in range(self.IO_RETRIES + 1):
+            if attempt:
+                self.io_retries += 1
+                time.sleep(self.IO_BACKOFF_S * attempt)
+            try:
+                failpoint("store.load.read", path=path.name)
+                blob = json.loads(path.read_text())
+            except FileNotFoundError:
+                return None     # pruned/quarantined concurrently: a miss
+            except json.JSONDecodeError as e:
+                reason = f"torn {what}: {e}"
+                continue
+            except OSError as e:
+                reason = f"io error: {e}"
+                continue
+            if not _sha_ok(blob):
+                reason = f"checksum mismatch on {what}"
+                continue
+            return blob
+        if reason and not reason.startswith("io error") and path.exists():
+            self._quarantine(path, reason)
+        return None
 
     # -- bit-width certificates ------------------------------------------------
     # The analysis layer's overflow-freedom proof (repro.analysis.certify)
@@ -195,21 +285,36 @@ class TableStore:
         cert.meta = {"v": CompileJob.VERSION, "key": key}
         if self.persist:
             path = self.cert_path(job)
+            blob = json.loads(cert.to_json())
+            blob["sha"] = _content_sha(blob)
             tmp = _tmp_name(path)
-            tmp.write_text(cert.to_json())
+            tmp.write_text(json.dumps(blob, sort_keys=True))
+            failpoint("store.put.before_rename", name=path.name)
             os.replace(tmp, path)   # atomic publish, like _put
         self._cert_seen.add(key)
         return cert
 
+    def _load_cert_file(self, path: Path):
+        """Parse + checksum-verify a stored certificate (sha stripped
+        before schema load).  Raises on torn/corrupt files — callers
+        classify that as stale/absent."""
+        from repro.analysis.certify import Certificate
+        blob = json.loads(path.read_text())
+        if not _sha_ok(blob):
+            raise ValueError(f"checksum mismatch on certificate {path.name}")
+        if isinstance(blob, dict):
+            blob.pop("sha", None)
+        return Certificate.from_json(json.dumps(blob))
+
     def load_certificate(self, job: CompileJob):
         """The stored certificate for ``job`` (stamps verified), or None."""
-        from repro.analysis.certify import CERT_VERSION, Certificate
+        from repro.analysis.certify import CERT_VERSION
         job = job.resolved()
         if not self.persist:
             return None
         path = self.cert_path(job)
         try:
-            cert = Certificate.load(path)
+            cert = self._load_cert_file(path)
         except (OSError, ValueError, KeyError, TypeError):
             return None
         if cert.cert_version != CERT_VERSION \
@@ -228,14 +333,14 @@ class TableStore:
         if not path.exists():
             return
         self.certs_checked += 1
-        from repro.analysis.certify import CERT_VERSION, Certificate
+        from repro.analysis.certify import CERT_VERSION
         try:
-            cert = Certificate.load(path)
+            cert = self._load_cert_file(path)
             fresh = (cert.cert_version == CERT_VERSION
                      and cert.meta.get("v") == CompileJob.VERSION
                      and cert.meta.get("key") == key)
         except (OSError, ValueError, KeyError, TypeError):
-            fresh = False
+            fresh = False       # torn cert companion: retire, never raise
         if not fresh:
             path.unlink(missing_ok=True)
             self.certs_stale += 1
@@ -264,18 +369,22 @@ class TableStore:
         if self.persist:
             path = self._path(job, key)
             if path.exists():
+                blob = self._read_json(path, what="artifact")
+                if blob is None:
+                    return None     # torn/quarantined: fall through, recompile
                 try:
-                    tab = PPATable.load(path)
+                    tab = PPATable.from_json(json.dumps(blob))
                 except Exception:
-                    path.unlink(missing_ok=True)
-                else:
-                    self.hits_disk += 1
-                    try:                    # refresh last-access for prune()
-                        os.utime(path)
-                    except OSError:
-                        pass
-                    self._remember(key, tab)
-                    return tab
+                    # parses as JSON but not as a table: corrupt payload
+                    self._quarantine(path, "invalid artifact schema")
+                    return None
+                self.hits_disk += 1
+                try:                    # refresh last-access for prune()
+                    os.utime(path)
+                except OSError:
+                    pass
+                self._remember(key, tab)
+                return tab
         return None
 
     def _put(self, job: CompileJob, key: str, table: PPATable) -> None:
@@ -289,8 +398,10 @@ class TableStore:
             # guarantee the sweep modes are checked against.
             blob = json.loads(table.to_json())
             blob["v"] = CompileJob.VERSION
+            blob["sha"] = _content_sha(blob)
             tmp = _tmp_name(path)
             tmp.write_text(json.dumps(blob))
+            failpoint("store.put.before_rename", name=path.name)
             os.replace(tmp, path)  # atomic publish
 
     def lookup(self, job: CompileJob) -> Optional[PPATable]:
@@ -366,8 +477,13 @@ class TableStore:
             return tab
         self.misses += 1
         self.compiles += 1
+        failpoint("compile.job", key=key)
         tab = self._apply_tuned(job).compile(session)
         self._put(job, key, tab)
+        # fires only once the artifact is durably published — the ledger
+        # line the chaos harness counts compiles by (a kill between
+        # compile start and here must be recompiled, and is not counted)
+        failpoint("compile.job.done", key=key)
         self._check_cert(job, key)
         return tab
 
@@ -580,8 +696,17 @@ class TableStore:
             except (OSError, ValueError):
                 stats["skipped_invalid"] += 1
                 continue
+            # the version check precedes the integrity check: a manifest
+            # declaring a foreign compile-semantics version refuses its
+            # keys outright, intact or not
             if man.get("v") != CompileJob.VERSION:
                 refused.update(man.get("keys", {}).values())
+                continue
+            if not _sha_ok(man):
+                # torn/tampered manifest: refuse its vouching, but its
+                # artifacts may still import unmanifested (each is
+                # checksum-verified on its own below)
+                stats["skipped_invalid"] += 1
                 continue
             for key, fname in man.get("keys", {}).items():
                 manifested[fname] = key
@@ -607,6 +732,7 @@ class TableStore:
             if (self.root / path.name).exists():
                 stats["skipped_present"] += 1
                 continue
+            failpoint("store.merge.file", name=path.name)
             try:
                 text = path.read_text()
                 blob = json.loads(text)
@@ -616,10 +742,15 @@ class TableStore:
                 stats["skipped_invalid"] += 1
                 continue
             # artifacts stamped with a foreign compile-semantics version
-            # are refused even without a manifest vouching for them
+            # are refused even without a manifest vouching for them; the
+            # version check precedes the integrity check since refusal
+            # does not depend on the rest of the blob being intact
             if isinstance(blob, dict) and blob.get("v", CompileJob.VERSION) \
                     != CompileJob.VERSION:
                 stats["skipped_version"] += 1
+                continue
+            if not _sha_ok(blob):           # truncation/bit-rot in transit
+                stats["skipped_invalid"] += 1
                 continue
             dst = self.root / path.name
             tmp = _tmp_name(dst)
@@ -734,7 +865,9 @@ class TableStore:
                 "evictions": self.evictions, "compiles": self.compiles,
                 "pinned": len(self._pinned),
                 "certs_checked": self.certs_checked,
-                "certs_stale": self.certs_stale}
+                "certs_stale": self.certs_stale,
+                "io_retries": self.io_retries,
+                "corrupt_quarantined": self.corrupt_quarantined}
 
 
 _DEFAULT: Optional[TableStore] = None

@@ -56,9 +56,10 @@ from typing import Dict, List, Optional, Sequence, Tuple
 from repro.core.datapath import FWLConfig
 from repro.core.functions import NAF_REGISTRY
 from repro.core.schemes import PPAScheme
+from repro.faults import failpoint
 
 from .batch import compile_batch
-from .store import CompileJob, TableStore, _tmp_name
+from .store import CompileJob, TableStore, _content_sha, _tmp_name
 
 __all__ = ["shard_of", "shard_jobs", "ShardReport", "run_shard",
            "WorkQueue", "LiveReport", "run_live",
@@ -188,7 +189,7 @@ def run_shard(jobs: Sequence[CompileJob], *,
 
 def _write_manifest(store: TableStore, report: ShardReport) -> Path:
     path = store.root / report.manifest_name
-    blob = json.dumps({
+    man = {
         "v": CompileJob.VERSION,
         "host_id": report.host_id, "hosts": report.hosts,
         "owner": report.owner, "written": time.time(),
@@ -198,9 +199,11 @@ def _write_manifest(store: TableStore, report: ShardReport) -> Path:
                   "deferred": len(report.deferred),
                   "taken_over": len(report.taken_over),
                   "wall_s": report.wall_s},
-    }, sort_keys=True)
+    }
+    man["sha"] = _content_sha(man)      # merge() verifies and refuses torn
     tmp = _tmp_name(path)
-    tmp.write_text(blob)
+    tmp.write_text(json.dumps(man, sort_keys=True))
+    failpoint("store.put.before_rename", name=path.name)
     os.replace(tmp, path)
     return path
 
@@ -364,11 +367,16 @@ def run_live(jobs: Sequence[CompileJob], *,
             last_done = len(q.done)
             waited = 0.0
         if wave:
+            # chaos crash sites: after the lease lands but before compile
+            # (claims left for TTL takeover) and after durable publish but
+            # before release (survivors see stored keys under a dead lease)
+            failpoint("sweep.wave.claimed", n=len(wave))
             try:
                 q.refresh(wave)
                 compile_batch([job for _, job in wave], store=store,
                               processes=processes)
                 q.mark_compiled(wave)
+                failpoint("sweep.wave.published", n=len(wave))
             finally:
                 q.release(wave)
             continue

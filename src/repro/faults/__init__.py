@@ -1,0 +1,17 @@
+"""repro.faults — deterministic failpoint registry.
+
+``failpoint("tier.site")`` calls are scattered through the store, serve
+and sweep tiers; they are inert (one global-bool check) until armed via
+``REPRO_FAILPOINTS`` or :func:`arm`/:func:`arm_spec`, after which each
+evaluation fires per a deterministic policy (raise / process-exit /
+latency / ledger-count).  See :mod:`repro.faults.registry` for the spec
+grammar and ``scripts/chaos.py`` for the chaos harness built on top.
+"""
+
+from .registry import (ENV, LEDGER_ENV, SEED_ENV, InjectedFault, arm,
+                       arm_spec, disarm, failpoint, fired, reset,
+                       set_ledger, snapshot, wrap)
+
+__all__ = ["InjectedFault", "failpoint", "wrap", "arm", "arm_spec",
+           "disarm", "reset", "fired", "snapshot", "set_ledger",
+           "ENV", "SEED_ENV", "LEDGER_ENV"]

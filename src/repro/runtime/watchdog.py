@@ -51,12 +51,24 @@ class Watchdog:
                    (m or 0.0) * self.deadline_factor)
 
     def step(self, fn, *args, **kw):
-        """Run one step under the watchdog; returns fn's result."""
+        """Run one step under the watchdog; returns fn's result.
+
+        The deadline timer is always disarmed on exit — including when
+        ``fn`` raises — and once the step has *settled* an in-flight
+        alarm is a no-op: ``Timer.cancel`` cannot stop a callback that
+        already started, so without the settled gate a step failing just
+        past the deadline would double-fault with a spurious ``on_hang``
+        (counted hang + side effects) for a step that is already over."""
         hang_evt = threading.Event()
+        lock = threading.Lock()
+        settled = [False]
 
         def _alarm():
-            self.hangs += 1
-            hang_evt.set()
+            with lock:
+                if settled[0]:
+                    return          # step already finished/raised
+                self.hangs += 1
+                hang_evt.set()
             if self.on_hang:
                 self.on_hang()
 
@@ -67,6 +79,8 @@ class Watchdog:
         try:
             out = fn(*args, **kw)
         finally:
+            with lock:
+                settled[0] = True
             timer.cancel()
         dt = time.monotonic() - t0
         if hang_evt.is_set():

@@ -48,6 +48,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.compiler import TableStore
+from repro.faults import failpoint
 from repro.models import (ModelCfg, ShardCtx, decode_step, init_cache,
                           make_model_acts, prefill)
 
@@ -76,19 +77,23 @@ class Request:
     temperature: float = 0.0
     extra: Optional[dict] = None       # enc_feats / vision_embeds
     tenant: Optional[str] = None       # set by the multi-tenant front
+    deadline_s: Optional[float] = None  # wall budget from submit()
     # filled by the engine:
     output: Optional[List[int]] = None
     done: bool = False
+    timed_out: bool = False            # reaped past deadline_s
+    rejected: Optional[str] = None     # shed reason ("queue_full", ...)
     t_submit: Optional[float] = None   # perf_counter at submit()
     t_first: Optional[float] = None    # first token emitted (admission)
-    t_done: Optional[float] = None     # last token emitted
+    t_done: Optional[float] = None     # last token emitted (or shed/reap)
 
 
 class ServeEngine:
     def __init__(self, cfg: ModelCfg, params, *, n_slots: int = 4,
                  cache_len: int = 256, ctx: Optional[ShardCtx] = None,
                  rng_seed: int = 0, table_store: Optional[TableStore] = None,
-                 act_backend: Optional[str] = None, coalesce: bool = True):
+                 act_backend: Optional[str] = None, coalesce: bool = True,
+                 max_queue: Optional[int] = None):
         # serving is the deployment hot path: ``act_backend`` overrides the
         # model config's activation execution backend (e.g. "pallas_fused"
         # to run quantize -> PPA -> dequantize -> gating in one kernel; see
@@ -127,6 +132,13 @@ class ServeEngine:
                                            self.acts, self.ctx,
                                            last_idx=last))
         self.queue: Deque[Request] = collections.deque()
+        # admission-control knobs: a bounded queue sheds (rejects) instead
+        # of buffering unboundedly; per-request deadlines are reaped at
+        # step start so an expired sequence frees its slot mid-decode.
+        self.max_queue = max_queue
+        self.shed = 0                   # rejected at submit (queue_full)
+        self.timed_out = 0              # reaped past deadline_s
+        self._has_deadlines = False     # skip the reap scan when unused
         self.coalesce = coalesce
         # padding is only sound when no stage carries prompt-order state
         # past the pads (SSM conv/h, RWKV time-mix) and prefill chunking
@@ -145,11 +157,60 @@ class ServeEngine:
         self._prefill_shapes: set = set()
 
     # ----------------------------------------------------------- admission
-    def submit(self, req: Request) -> None:
+    def submit(self, req: Request) -> bool:
+        """Enqueue ``req``; returns False when load-shed.
+
+        With ``max_queue`` set, a full queue rejects instead of buffering:
+        the request is finalised immediately (``done=True``, empty output,
+        ``rejected="queue_full"``, latency stamped) so callers waiting on
+        ``done`` never hang on a request the engine will not run."""
         req.output = []
         if req.t_submit is None:        # the tenant front stamps earlier
             req.t_submit = time.perf_counter()
+        if self.max_queue is not None and len(self.queue) >= self.max_queue:
+            req.rejected = "queue_full"
+            req.done = True
+            req.t_done = time.perf_counter()
+            self.shed += 1
+            return False
+        if req.deadline_s is not None:
+            self._has_deadlines = True
         self.queue.append(req)
+        return True
+
+    def _reap_deadlines(self) -> int:
+        """Expire requests past their deadline; returns how many.
+
+        Queued requests are dropped before admission; active ones free
+        their slot mid-decode (partial output is kept on the request)."""
+        now = time.perf_counter()
+
+        def _expired(r: Request) -> bool:
+            return (r.deadline_s is not None and r.t_submit is not None
+                    and now - r.t_submit > r.deadline_s)
+
+        n = 0
+        if any(_expired(r) for r in self.queue):
+            kept: Deque[Request] = collections.deque()
+            for r in self.queue:
+                if _expired(r):
+                    r.timed_out = True
+                    r.done = True
+                    r.t_done = now
+                    n += 1
+                else:
+                    kept.append(r)
+            self.queue = kept
+        for i, r in enumerate(self.slot_req):
+            if r is not None and _expired(r):
+                r.timed_out = True
+                r.done = True
+                r.t_done = now
+                self.slot_req[i] = None
+                self.remaining[i] = 0
+                n += 1
+        self.timed_out += n
+        return n
 
     def _free_slots(self) -> List[int]:
         return [i for i, r in enumerate(self.slot_req) if r is None]
@@ -310,6 +371,9 @@ class ServeEngine:
         """Admit pending requests, decode one token for every active slot.
 
         Returns the number of active sequences stepped."""
+        failpoint("serve.decode.step")
+        if self._has_deadlines:
+            self._reap_deadlines()
         self._admit()
         active = [i for i, r in enumerate(self.slot_req) if r is not None]
         if not active:
@@ -389,6 +453,18 @@ class ServeEngine:
             jax.block_until_ready(logits)
             n += 1
         return n
+
+    def stats(self) -> Dict[str, int]:
+        """Load/health counters for operators and the tenant front."""
+        return {
+            "queue_depth": len(self.queue),
+            "active_slots": sum(r is not None for r in self.slot_req),
+            "n_slots": self.n_slots,
+            "max_queue": self.max_queue if self.max_queue is not None else -1,
+            "shed": self.shed,
+            "timed_out": self.timed_out,
+            "prefill_retraces": self.prefill_retraces,
+        }
 
     def run_until_drained(self, max_steps: int = 10_000) -> None:
         for _ in range(max_steps):

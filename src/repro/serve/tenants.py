@@ -23,6 +23,14 @@ fair-shared: each scheduling pass hands every tenant with backlog one
 admission in rotating round-robin order, bounded by the per-engine free
 slots and the optional global ``max_active`` budget (tenants sharing one
 accelerator), so one chatty tenant cannot starve the rest.
+
+**Fault isolation.**  A tenant whose warm-up or lazy engine build raises
+is *degraded*, never fatal to the front: its partial table pins are
+rolled back and — when the spec opts in via ``fallback_exact`` — it is
+re-admitted on the float (``act_impl="exact"``) bundle, still serving;
+otherwise its requests are rejected with ``rejected="tenant_degraded"``.
+Either way the other tenants' engines, pins and RNG streams are never
+touched, so their outputs stay bit-identical to a fault-free run.
 """
 
 from __future__ import annotations
@@ -33,6 +41,7 @@ import time
 from typing import Any, Deque, Dict, List, Optional, Sequence
 
 from repro.compiler import CompileJob, TableStore
+from repro.faults import failpoint
 from repro.models import ModelCfg, ppa_table_jobs
 
 from .engine import Request, ServeEngine
@@ -54,6 +63,9 @@ class TenantSpec:
     rng_seed: int = 0
     #: prompt-length buckets to pre-trace at admission (warm tenants)
     warm_prompt_lens: Sequence[int] = (8,)
+    #: on warm/build failure, re-admit on the float (``act_impl="exact"``)
+    #: bundle instead of rejecting the tenant's requests
+    fallback_exact: bool = False
 
 
 class TenantFront:
@@ -66,6 +78,10 @@ class TenantFront:
         self.pending: Dict[str, Deque[Request]] = {}
         self.warmups: Dict[str, dict] = {}
         self._rr: List[str] = []        # rotating fair-share order
+        self.degraded: Dict[str, str] = {}      # tenant -> reason
+        # per-tenant pinned jobs, so degrade/remove roll back exactly the
+        # pins THIS tenant holds (never another tenant's refcounts)
+        self._pins: Dict[str, List[CompileJob]] = {}
 
     # ------------------------------------------------------------ tenants
     def add_tenant(self, spec: TenantSpec, *, warm: bool = True) -> dict:
@@ -78,21 +94,74 @@ class TenantFront:
             raise ValueError(f"tenant {spec.name!r} already admitted")
         self.specs[spec.name] = spec
         self.pending[spec.name] = collections.deque()
+        self._pins[spec.name] = []
         self._rr.append(spec.name)
         t0 = time.perf_counter()
         pinned = traces = 0
         if warm:
-            for naf, fcfg, scheme in ppa_table_jobs(spec.cfg.act_impl):
-                self.store.compile_or_load(naf, fcfg, scheme)
-                self.store.pin(CompileJob(naf=naf, cfg=fcfg, scheme=scheme))
-                pinned += 1
-            eng = self._build_engine(spec)
-            traces = eng.warmup(spec.warm_prompt_lens)
+            try:
+                failpoint("serve.tenant.warm", tenant=spec.name)
+                for naf, fcfg, scheme in ppa_table_jobs(spec.cfg.act_impl):
+                    self.store.compile_or_load(naf, fcfg, scheme)
+                    job = CompileJob(naf=naf, cfg=fcfg, scheme=scheme)
+                    self.store.pin(job)
+                    self._pins[spec.name].append(job)
+                    pinned += 1
+                eng = self._build_engine(spec)
+                traces = eng.warmup(spec.warm_prompt_lens)
+            except Exception as e:      # noqa: BLE001 — isolate, never fatal
+                self._degrade(spec.name, f"warmup failed: {e!r}")
+                pinned, traces = len(self._pins[spec.name]), 0
         report = {"tenant": spec.name, "warm": warm,
                   "tables_pinned": pinned, "warm_traces": traces,
+                  "degraded": self.degraded.get(spec.name),
                   "warmup_s": round(time.perf_counter() - t0, 4)}
         self.warmups[spec.name] = report
         return report
+
+    # -------------------------------------------------------- fault walls
+    def _degrade(self, name: str, reason: str) -> None:
+        """Wall off a failing tenant without disturbing its neighbours.
+
+        Rolls back exactly the pins this tenant holds and drops its
+        (possibly half-built) engine.  With ``fallback_exact`` the tenant
+        is re-admitted on the float bundle — no PPA tables, no custom
+        backend — and keeps serving; otherwise its queued requests are
+        rejected and future submits bounce (``rejected="tenant_degraded"``).
+        """
+        spec = self.specs[name]
+        for job in self._pins.pop(name, []):
+            try:
+                self.store.unpin(job)
+            except Exception:           # noqa: BLE001 — best-effort rollback
+                pass
+        self._pins[name] = []
+        self.engines.pop(name, None)
+        if spec.fallback_exact and spec.cfg.act_impl != "exact":
+            self.specs[name] = dataclasses.replace(
+                spec,
+                cfg=dataclasses.replace(spec.cfg, act_impl="exact",
+                                        act_backend="ref"),
+                act_backend=None, fallback_exact=False)
+            self.degraded[name] = f"fallback-exact: {reason}"
+            return
+        self.degraded[name] = reason
+        self._reject_pending(name)
+
+    def _reject_pending(self, name: str) -> None:
+        now = time.perf_counter()
+        for req in self.pending[name]:
+            req.output = req.output or []
+            req.rejected = "tenant_degraded"
+            req.done = True
+            req.t_done = now
+        self.pending[name].clear()
+
+    def _serving(self, name: str) -> bool:
+        """Degraded-without-fallback tenants are walled off; everyone
+        else (healthy or serving on the exact fallback) admits work."""
+        return not (name in self.degraded and
+                    not self.degraded[name].startswith("fallback-exact"))
 
     def remove_tenant(self, name: str) -> None:
         """Retire a tenant: unpin its table set and drop its engine.
@@ -104,14 +173,16 @@ class TenantFront:
             eng.queue or any(r is not None for r in eng.slot_req)))
         if busy:
             raise RuntimeError(f"tenant {name!r} still has work in flight")
-        for naf, fcfg, scheme in ppa_table_jobs(spec.cfg.act_impl):
-            self.store.unpin(CompileJob(naf=naf, cfg=fcfg, scheme=scheme))
+        for job in self._pins.pop(name, []):
+            self.store.unpin(job)
         self.engines.pop(name, None)
         self.pending.pop(name)
         self.specs.pop(name)
+        self.degraded.pop(name, None)
         self._rr.remove(name)
 
     def _build_engine(self, spec: TenantSpec) -> ServeEngine:
+        failpoint("serve.tenant.build", tenant=spec.name)
         eng = ServeEngine(spec.cfg, spec.params, n_slots=spec.n_slots,
                           cache_len=spec.cache_len, table_store=self.store,
                           act_backend=spec.act_backend,
@@ -128,12 +199,22 @@ class TenantFront:
         return eng
 
     # ----------------------------------------------------------- requests
-    def submit(self, tenant: str, req: Request) -> None:
+    def submit(self, tenant: str, req: Request) -> bool:
+        """Queue ``req`` for ``tenant``; False when the tenant is walled
+        off (degraded without fallback) — the request is finalised with
+        ``rejected="tenant_degraded"`` instead of hanging forever."""
         if tenant not in self.specs:
             raise KeyError(f"unknown tenant {tenant!r}")
         req.tenant = tenant
         req.t_submit = time.perf_counter()
+        if not self._serving(tenant):
+            req.output = req.output or []
+            req.rejected = "tenant_degraded"
+            req.done = True
+            req.t_done = req.t_submit
+            return False
         self.pending[tenant].append(req)
+        return True
 
     def active_slots(self) -> int:
         """Occupied slots plus engine-queued requests across tenants."""
@@ -155,7 +236,15 @@ class TenantFront:
                 q = self.pending[name]
                 if not q:
                     continue
-                eng = self._engine(name)
+                try:
+                    # where a cold tenant's lazy engine build can fail —
+                    # degrade it (fallback or reject) and keep scheduling
+                    # the other tenants untouched
+                    eng = self._engine(name)
+                except Exception as e:  # noqa: BLE001 — isolate, never fatal
+                    self._degrade(name, f"engine build failed: {e!r}")
+                    progressed = True   # pending changed (rejected/kept)
+                    continue
                 free = (eng.n_slots
                         - sum(r is not None for r in eng.slot_req)
                         - len(eng.queue))
@@ -178,6 +267,15 @@ class TenantFront:
             if eng.queue or any(r is not None for r in eng.slot_req):
                 total += eng.step()
         return total
+
+    def stats(self) -> Dict[str, Any]:
+        """Front-wide health: per-tenant engine stats plus degradations."""
+        return {
+            "tenants": sorted(self.specs),
+            "degraded": dict(self.degraded),
+            "pending": {n: len(q) for n, q in self.pending.items()},
+            "engines": {n: e.stats() for n, e in self.engines.items()},
+        }
 
     @property
     def drained(self) -> bool:

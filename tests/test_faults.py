@@ -1,0 +1,511 @@
+"""Fault injection + hardening: the repro.faults registry itself, the
+store tier's checksum/quarantine/retry paths, the serve tier's shedding /
+deadlines / tenant isolation, and the runtime satellites (metrics logger
+coercion, watchdog timer hygiene)."""
+
+import dataclasses
+import functools
+import json
+import os
+import subprocess
+import sys
+import time
+
+import pytest
+
+from repro.compiler import CompileJob, TableStore, compile_batch
+from repro.compiler.store import _content_sha
+from repro.core import FWLConfig, PPAScheme
+from repro.faults import (ENV, InjectedFault, arm, arm_spec, failpoint,
+                          fired, reset, set_ledger, snapshot, wrap)
+from repro.runtime import MetricsLogger, Watchdog
+
+CFG = FWLConfig(7, 7, (7,), (7,), 7)
+
+
+@pytest.fixture(autouse=True)
+def _clean_registry():
+    """Every test starts and ends with nothing armed."""
+    reset()
+    yield
+    reset()
+
+
+def _job(naf="sigmoid", q="fqa"):
+    return CompileJob(naf=naf, cfg=CFG, scheme=PPAScheme(1, None, q))
+
+
+# ============================================================== registry
+def test_failpoint_is_noop_unarmed():
+    failpoint("no.such.site", k=1)
+    with failpoint("no.such.site"):
+        pass
+    assert snapshot() == {}
+    assert fired("no.such.site") == 0
+
+
+def test_policy_once_always_every_after():
+    def fires(policy, evals):
+        reset()
+        arm("p.x", policy)
+        out = []
+        for _ in range(evals):
+            try:
+                failpoint("p.x")
+                out.append(False)
+            except InjectedFault:
+                out.append(True)
+        return out
+
+    assert fires("once", 4) == [True, False, False, False]
+    assert fires("always", 3) == [True, True, True]
+    assert fires("every=2", 5) == [False, True, False, True, False]
+    assert fires("after=2", 5) == [False, False, True, True, True]
+
+
+def test_policy_prob_is_seed_deterministic():
+    def pattern(seed):
+        reset()
+        arm("p.r", "prob=0.5", seed=seed)
+        out = []
+        for _ in range(32):
+            try:
+                failpoint("p.r")
+                out.append(0)
+            except InjectedFault:
+                out.append(1)
+        return out
+
+    a, b = pattern(123), pattern(123)
+    assert a == b, "same seed must replay the same firing pattern"
+    assert 0 < sum(a) < 32
+    assert pattern(124) != a
+
+
+def test_spec_grammar_and_errors():
+    assert arm_spec("a.b:once,c.d:every=3:raise=oserror") == 2
+    assert set(snapshot()) == {"a.b", "c.d"}
+    for bad in ("noname", "x:sometimes", "x:once:explode", "x:every=0",
+                "x:once=3", ":once", "x:raise"):
+        with pytest.raises(ValueError):
+            arm_spec(bad)
+
+
+def test_actions_raise_kinds_sleep_count(tmp_path):
+    arm("io.x", "once", action="raise=oserror")
+    with pytest.raises(OSError):
+        failpoint("io.x")
+    arm("torn.x", "once", action="raise=json")
+    with pytest.raises(json.JSONDecodeError):
+        failpoint("torn.x")
+    arm("slow.x", "once", action="sleep=0.05")
+    t0 = time.monotonic()
+    failpoint("slow.x")
+    assert time.monotonic() - t0 >= 0.05
+    led = tmp_path / "led.jsonl"
+    set_ledger(led)
+    arm("trace.x", "always", action="count")
+    failpoint("trace.x", key="k1")
+    failpoint("trace.x", key="k2")
+    lines = [json.loads(ln) for ln in led.read_text().splitlines()]
+    assert lines == [{"fp": "trace.x", "key": "k1"},
+                     {"fp": "trace.x", "key": "k2"}]
+
+
+def test_multiple_arms_and_wrap_decorator():
+    # a count trace AND a raise on the same site, in arming order
+    set_ledger(None)
+    arm("multi.x", "always", action="count")   # no ledger -> just counts
+    arm("multi.x", "once")
+    with pytest.raises(InjectedFault):
+        failpoint("multi.x")
+    failpoint("multi.x")                        # raise arm spent
+    assert fired("multi.x") == 3                # 2 count fires + 1 raise
+
+    calls = []
+
+    @wrap("deco.x")
+    def f(v):
+        calls.append(v)
+        return v * 2
+
+    assert f(3) == 6
+    arm("deco.x", "once")
+    with pytest.raises(InjectedFault):
+        f(4)
+    assert calls == [3], "the fault fires before the wrapped body runs"
+
+
+def test_env_arming_reaches_subprocesses():
+    env = dict(os.environ)
+    env[ENV] = "sub.site:once"
+    env["PYTHONPATH"] = "src" + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    out = subprocess.run(
+        [sys.executable, "-c",
+         "import json; from repro.faults import snapshot; "
+         "print(json.dumps(sorted(snapshot())))"],
+        env=env, capture_output=True, text=True)
+    assert out.returncode == 0, out.stderr
+    assert json.loads(out.stdout) == ["sub.site"]
+
+
+# ======================================================== store hardening
+def test_artifact_sha_stamped_and_legacy_loads(tmp_path):
+    store = TableStore(tmp_path)
+    job = _job()
+    store.compile_or_load(job.naf, job.cfg, job.scheme)
+    j = job.resolved()
+    path = store._path(j, j.key())
+    blob = json.loads(path.read_text())
+    assert blob["sha"] == _content_sha(blob)
+    # verified on load by a fresh store: disk hit, no recompile
+    s2 = TableStore(tmp_path)
+    assert s2.compile_or_load(job.naf, job.cfg, job.scheme) is not None
+    assert s2.compiles == 0 and s2.hits_disk == 1
+    # an unstamped (legacy) artifact still loads
+    blob.pop("sha")
+    path.write_text(json.dumps(blob, sort_keys=True))
+    s3 = TableStore(tmp_path)
+    assert s3.compile_or_load(job.naf, job.cfg, job.scheme) is not None
+    assert s3.compiles == 0
+
+
+def _corrupt_keep_sha(path):
+    """Flip payload under the old checksum — bit-rot, not a rewrite."""
+    blob = json.loads(path.read_text())
+    blob["mae_hard"] = 0.999
+    path.write_text(json.dumps(blob, sort_keys=True))
+
+
+def test_corrupt_artifact_quarantined_and_recompiled(tmp_path):
+    store = TableStore(tmp_path)
+    job = _job()
+    store.compile_or_load(job.naf, job.cfg, job.scheme)
+    j = job.resolved()
+    path = store._path(j, j.key())
+    _corrupt_keep_sha(path)
+    s2 = TableStore(tmp_path)
+    tab = s2.compile_or_load(job.naf, job.cfg, job.scheme)
+    assert tab is not None and s2.compiles == 1, \
+        "corrupt artifact must fall through to a recompile"
+    assert s2.corrupt_quarantined == 1
+    assert s2.stats()["corrupt_quarantined"] == 1
+    assert len(list(s2.quarantine_dir.iterdir())) == 1
+    # the republished artifact is valid again
+    assert json.loads(path.read_text())["sha"]
+    s3 = TableStore(tmp_path)
+    s3.compile_or_load(job.naf, job.cfg, job.scheme)
+    assert s3.compiles == 0
+
+
+def test_truncated_artifact_quarantined(tmp_path):
+    store = TableStore(tmp_path)
+    job = _job()
+    store.compile_or_load(job.naf, job.cfg, job.scheme)
+    j = job.resolved()
+    path = store._path(j, j.key())
+    path.write_bytes(path.read_bytes()[: path.stat().st_size // 2])
+    s2 = TableStore(tmp_path)
+    assert s2.compile_or_load(job.naf, job.cfg, job.scheme) is not None
+    assert s2.compiles == 1 and s2.corrupt_quarantined == 1
+    assert s2.quarantined[0][1].startswith("torn artifact")
+
+
+def test_transient_io_error_retried_not_quarantined(tmp_path):
+    store = TableStore(tmp_path)
+    job = _job()
+    store.compile_or_load(job.naf, job.cfg, job.scheme)
+    s2 = TableStore(tmp_path)
+    arm("store.load.read", "once", action="raise=oserror")
+    assert s2.compile_or_load(job.naf, job.cfg, job.scheme) is not None
+    assert s2.compiles == 0, "one transient error must not force a recompile"
+    assert s2.io_retries == 1 and s2.corrupt_quarantined == 0
+    assert not s2.quarantine_dir.exists()
+
+
+def test_put_crash_before_rename_leaves_no_artifact(tmp_path):
+    store = TableStore(tmp_path)
+    job = _job()
+    arm("store.put.before_rename", "once")
+    with pytest.raises(InjectedFault):
+        store.compile_or_load(job.naf, job.cfg, job.scheme)
+    j = job.resolved()
+    assert not store._path(j, j.key()).exists(), \
+        "a crash before os.replace must not leave a partial artifact"
+    s2 = TableStore(tmp_path)
+    assert s2.compile_or_load(job.naf, job.cfg, job.scheme) is not None
+    assert s2.compiles == 1
+
+
+def test_torn_cert_companion_retired_without_raising(tmp_path):
+    store = TableStore(tmp_path)
+    job = _job()
+    cert = store.certify(job)
+    assert cert.ok
+    cpath = store.cert_path(job)
+    blob = json.loads(cpath.read_text())
+    assert blob["sha"] == _content_sha(blob)
+    # fresh store round-trips the stamped certificate
+    assert TableStore(tmp_path).load_certificate(job) is not None
+    # bit-rot under the checksum: load returns None, serving retires it
+    blob["max_bits"] = 9999
+    cpath.write_text(json.dumps(blob, sort_keys=True))
+    s2 = TableStore(tmp_path)
+    assert s2.load_certificate(job) is None
+    s2.compile_or_load(job.naf, job.cfg, job.scheme)
+    assert s2.certs_stale == 1 and not cpath.exists()
+    # truncated companion: same retirement, still no raise
+    store.certify(job)
+    cpath.write_text("{\"cert_version\":")
+    s3 = TableStore(tmp_path)
+    s3.compile_or_load(job.naf, job.cfg, job.scheme)
+    assert s3.certs_stale == 1 and not cpath.exists()
+
+
+def test_claim_garbage_tolerated_on_all_read_paths(tmp_path):
+    store = TableStore(tmp_path)
+    key = "deadbeef"
+    store._claim_path(key).write_text("not json {")
+    assert store.claim_info(key) is None
+    assert store.claim_status(key) == "claimed-by-unreadable"
+    # ttl ages the unreadable claim by mtime, so it IS recoverable
+    old = time.time() - 100
+    os.utime(store._claim_path(key), (old, old))
+    assert store.claim_status(key, ttl_s=1.0).startswith("stale(unreadable")
+    assert store.try_claim(key, owner="me", ttl_s=1.0)
+    assert store.claim_info(key)["owner"] == "me"
+
+
+def test_merge_skips_torn_files_and_reports(tmp_path):
+    src = TableStore(tmp_path / "src")
+    jobs = [_job("sigmoid"), _job("tanh"), _job("gelu_inner")]
+    compile_batch(jobs, store=src, processes=1)
+    paths = sorted((tmp_path / "src").glob("*.json"))
+    _corrupt_keep_sha(paths[0])                     # checksum mismatch
+    paths[1].write_text("{ torn")                   # not JSON at all
+    (tmp_path / "src" / "x.manifest").write_text(
+        json.dumps({"v": CompileJob.VERSION, "keys": {}, "sha": "wrong"}))
+    dst = TableStore(tmp_path / "dst")
+    stats = dst.merge(tmp_path / "src")
+    assert stats["imported"] == 1
+    assert stats["skipped_invalid"] == 3            # 2 artifacts + manifest
+    # the intact artifact really landed
+    assert any(dst.contains(j.resolved()) for j in jobs)
+
+
+def test_gc_paths_tolerate_garbage(tmp_path):
+    store = TableStore(tmp_path)
+    job = _job()
+    store.compile_or_load(job.naf, job.cfg, job.scheme)
+    (tmp_path / "junk-zz.json").write_text("{ torn")
+    store.version_sweep()               # must not raise on the torn file
+    store.prune(max_files=10)
+    s2 = TableStore(tmp_path)
+    assert s2.compile_or_load(job.naf, job.cfg, job.scheme) is not None
+
+
+# ==================================================== runtime satellites
+def test_metrics_logger_never_raises(tmp_path):
+    path = tmp_path / "m" / "log.jsonl"
+    m = MetricsLogger(str(path))
+    rec = m.log(1, loss=float("nan"), grad=float("inf"), lr=1e-3,
+                note="resumed", shape=(4, 4))
+    assert rec["loss"] is None and rec["grad"] is None
+    assert rec["lr"] == 1e-3
+    assert rec["note"] == "resumed" and rec["shape"] == "(4, 4)"
+    assert m.coerced == 4
+    line = path.read_text().strip()
+    assert json.loads(line)["step"] == 1    # strict JSON on disk
+    # disk trouble: swallowed and counted, the step loop survives
+    m.path = tmp_path                       # open(dir, "a") -> OSError
+    rec = m.log(2, loss=0.5)
+    assert rec["loss"] == 0.5 and m.write_errors == 1
+
+
+def test_watchdog_cancels_timer_when_step_raises(monkeypatch):
+    import repro.runtime.watchdog as wdmod
+
+    timers = []
+
+    class FakeTimer:
+        def __init__(self, interval, fn):
+            self.fn = fn
+            self.cancelled = False
+            timers.append(self)
+
+        def start(self):
+            pass
+
+        def cancel(self):
+            self.cancelled = True
+
+    monkeypatch.setattr(wdmod.threading, "Timer", FakeTimer)
+    hung = []
+    wd = Watchdog(min_deadline_s=0.01, on_hang=lambda: hung.append(1))
+
+    def bad_step():
+        raise ValueError("step blew up")
+
+    with pytest.raises(ValueError):
+        wd.step(bad_step)
+    assert timers[0].cancelled, "deadline timer leaked past the exception"
+    # the race Timer.cancel cannot close: the alarm callback had already
+    # started when the step raised — it must see the step as settled
+    timers[0].fn()
+    assert wd.hangs == 0 and hung == [], \
+        "alarm after the step settled must be a no-op"
+    # and the watchdog still works for the next step
+    assert wd.step(lambda: 42) == 42
+    assert wd.hangs == 0
+
+
+def test_watchdog_still_detects_real_hangs():
+    wd = Watchdog(min_deadline_s=0.05)
+    from repro.runtime import StepHang
+    with pytest.raises(StepHang):
+        wd.step(time.sleep, 0.3)
+    assert wd.hangs == 1
+
+
+# ========================================================== serve tier
+jax = pytest.importorskip("jax")
+
+
+@functools.lru_cache(maxsize=None)
+def _serve_setup():
+    from repro.configs import get_smoke_config
+    from repro.models import init_params, param_specs
+    cfg = dataclasses.replace(get_smoke_config("internlm2-1.8b"),
+                              act_impl="exact")
+    params = init_params(param_specs(cfg), jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _reqs(cfg, n, *, max_new=3, deadline_s=None, seed=3):
+    import numpy as np
+    from repro.serve import Request
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab, 8).astype(np.int32),
+                    max_new_tokens=max_new, deadline_s=deadline_s)
+            for i in range(n)]
+
+
+def test_engine_bounded_queue_sheds_with_reason():
+    from repro.serve import ServeEngine
+    cfg, params = _serve_setup()
+    eng = ServeEngine(cfg, params, n_slots=1, cache_len=48, max_queue=2)
+    reqs = _reqs(cfg, 4, max_new=2)
+    accepted = [eng.submit(r) for r in reqs]
+    assert accepted == [True, True, False, False]
+    for r in reqs[2:]:
+        assert r.rejected == "queue_full" and r.done and r.output == []
+        assert r.t_done is not None
+    st = eng.stats()
+    assert st["shed"] == 2 and st["queue_depth"] == 2 and st["max_queue"] == 2
+    eng.run_until_drained()
+    assert all(len(r.output) == 2 for r in reqs[:2])
+    assert eng.stats()["queue_depth"] == 0
+
+
+def test_engine_deadline_reaped_before_admission():
+    from repro.serve import ServeEngine
+    cfg, params = _serve_setup()
+    eng = ServeEngine(cfg, params, n_slots=1, cache_len=48)
+    live = _reqs(cfg, 1, max_new=3)[0]
+    doomed = _reqs(cfg, 1, max_new=3, deadline_s=1e-6, seed=4)[0]
+    eng.submit(live)
+    eng.submit(doomed)
+    time.sleep(0.01)
+    eng.run_until_drained()
+    assert doomed.timed_out and doomed.done and doomed.output == []
+    assert not live.timed_out and len(live.output) == 3
+    assert eng.stats()["timed_out"] == 1
+
+
+def test_engine_deadline_reaped_mid_decode_frees_slot():
+    from repro.serve import ServeEngine
+    cfg, params = _serve_setup()
+    eng = ServeEngine(cfg, params, n_slots=1, cache_len=64)
+    # the first step pays jit tracing (>> the deadline), so the request
+    # is reaped mid-sequence with partial output
+    req = _reqs(cfg, 1, max_new=10_000, deadline_s=0.02)[0]
+    eng.submit(req)
+    eng.run_until_drained()
+    assert req.timed_out and req.done
+    assert 1 <= len(req.output) < 10_000, "partial output must be kept"
+    st = eng.stats()
+    assert st["timed_out"] == 1 and st["active_slots"] == 0
+
+
+def test_tenant_warm_failure_degrades_only_that_tenant(tmp_path):
+    from repro.serve import TenantFront, TenantSpec
+    cfg, params = _serve_setup()
+    store = TableStore(tmp_path)
+
+    # fault-free reference for tenant a's tokens
+    base = TenantFront(store)
+    base.add_tenant(TenantSpec(name="a", cfg=cfg, params=params,
+                               n_slots=2, cache_len=48))
+    base_reqs = _reqs(cfg, 3)
+    for r in base_reqs:
+        base.submit("a", r)
+    base.run_until_drained()
+
+    front = TenantFront(store)
+    arm("serve.tenant.warm", "once")
+    rep = front.add_tenant(TenantSpec(name="b", cfg=cfg, params=params))
+    reset()
+    assert rep["degraded"] and "b" in front.degraded
+    front.add_tenant(TenantSpec(name="a", cfg=cfg, params=params,
+                                n_slots=2, cache_len=48))
+    bounced = _reqs(cfg, 1, seed=9)[0]
+    assert front.submit("b", bounced) is False
+    assert bounced.rejected == "tenant_degraded" and bounced.done
+    reqs = _reqs(cfg, 3)
+    for r in reqs:
+        front.submit("a", r)
+    front.run_until_drained()
+    assert [r.output for r in reqs] == [r.output for r in base_reqs], \
+        "healthy tenant's tokens must not shift when a neighbour degrades"
+    assert front.stats()["degraded"] == {"b": front.degraded["b"]}
+    assert store.stats()["pinned"] == 0     # b's partial pins rolled back
+
+
+def test_tenant_lazy_build_failure_isolated(tmp_path):
+    from repro.serve import TenantFront, TenantSpec
+    cfg, params = _serve_setup()
+    front = TenantFront(TableStore(tmp_path))
+    front.add_tenant(TenantSpec(name="ok", cfg=cfg, params=params,
+                                n_slots=1, cache_len=48))     # engine built
+    front.add_tenant(TenantSpec(name="lazy", cfg=cfg, params=params),
+                     warm=False)
+    arm("serve.tenant.build", "once")
+    doomed = _reqs(cfg, 1)[0]
+    good = _reqs(cfg, 1, seed=8)[0]
+    front.submit("lazy", doomed)
+    front.submit("ok", good)
+    front.run_until_drained()
+    reset()
+    assert doomed.rejected == "tenant_degraded" and doomed.done
+    assert "lazy" in front.degraded and "ok" not in front.degraded
+    assert good.done and len(good.output) == 3
+
+
+def test_tenant_fallback_exact_still_serves(tmp_path):
+    from repro.serve import TenantFront, TenantSpec
+    cfg, params = _serve_setup()
+    ppa_cfg = dataclasses.replace(cfg, act_impl="ppa")
+    front = TenantFront(TableStore(tmp_path))
+    arm("serve.tenant.warm", "once")
+    rep = front.add_tenant(TenantSpec(name="t", cfg=ppa_cfg, params=params,
+                                      n_slots=1, cache_len=48,
+                                      fallback_exact=True))
+    reset()
+    assert rep["degraded"].startswith("fallback-exact")
+    assert front.specs["t"].cfg.act_impl == "exact"
+    req = _reqs(cfg, 1, max_new=2)[0]
+    assert front.submit("t", req) is True, "fallback tenant keeps serving"
+    front.run_until_drained()
+    assert req.done and len(req.output) == 2 and req.rejected is None
